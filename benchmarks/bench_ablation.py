@@ -1,0 +1,113 @@
+"""Ablation (beyond-paper): which pieces of the RAG profiling pipeline
+actually buy satisfaction?
+
+Variants over 100 clients / 6 rounds (oracle-scored like Fig. 3):
+- unified        : hardware tiers only (paper baseline)
+- priors_only    : Eqs (1)-(4) with analytic priors, no interview, no DBs
+- interview_only : + SimLLM interviews (weights/context), DBs disabled
+- full_rag       : + both RAG DBs with per-round feedback (the paper)
+- oracle_weights : planner given the TRUE sensitivity weights (upper bound
+                   on what better profiling could add)
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core.profiling import (RAGPlanner, UnifiedTierPlanner, make_fleet,
+                                  make_users, plan_round, satisfaction_score,
+                                  true_performance)
+from repro.core.profiling.interview import InferredProfile
+
+
+class PriorsOnlyPlanner(RAGPlanner):
+    name = "priors_only"
+
+    def plan(self, users, specs, **kw):
+        out = []
+        from repro.core.profiling.evaluator import evaluate_levels, select_level
+        from repro.core.profiling.planner import PlanDecision
+        for u, s in zip(users, specs):
+            prof = InferredProfile(user_id=u.user_id)  # no interview signal
+            levels = evaluate_levels(prof, s, self.cqf_db, self.hqp_db,
+                                     strategy=self.strategy)
+            best = select_level(levels)
+            out.append(PlanDecision(u.user_id, best.bits, best.score, levels))
+        return out
+
+    def observe_feedback(self, *a, **kw):
+        pass  # DBs stay empty
+
+
+class InterviewOnlyPlanner(RAGPlanner):
+    name = "interview_only"
+
+    def observe_feedback(self, *a, **kw):
+        pass  # interviews accumulate; DBs never filled
+
+
+class OracleWeightsPlanner(RAGPlanner):
+    name = "oracle_weights"
+
+    def plan(self, users, specs, **kw):
+        decisions = super().plan(users, specs, **kw)
+        # overwrite the inferred weights with ground truth and re-evaluate
+        from repro.core.profiling.evaluator import evaluate_levels, select_level
+        from repro.core.profiling.planner import PlanDecision
+        out = []
+        for d, u, s in zip(decisions, users, specs):
+            prof = self.profiles[u.user_id]
+            prof = InferredProfile(
+                user_id=u.user_id, location=u.location, location_conf=1.0,
+                time=u.interaction_time, time_conf=1.0,
+                frequency=u.frequency, frequency_conf=1.0,
+                sens={f: 3.0 * w for f, w in u.weights.items()},
+                category_signal=dict(u.category_mix))
+            levels = evaluate_levels(prof, s, self.cqf_db, self.hqp_db,
+                                     strategy=self.strategy)
+            best = select_level(levels)
+            out.append(PlanDecision(u.user_id, best.bits, best.score, levels))
+        return out
+
+
+def run(planner, users, fleet, rounds=6):
+    sats, ens = [], []
+    for r in range(rounds):
+        for d, u, s in zip(plan_round(planner.plan(users, fleet)), users, fleet):
+            sat = satisfaction_score(u, s, d.bits)
+            perf = true_performance(u, s, d.bits)
+            planner.observe_feedback(u, s, d.bits, sat, perf)
+            if r == rounds - 1:
+                sats.append(sat)
+                ens.append(perf["energy"])
+    return float(np.mean(sats)), float(np.mean(ens))
+
+
+def main(n=100, seed=0, csv: bool = False):
+    users = make_users(n, seed=seed)
+    fleet = make_fleet(n, seed=seed)
+    variants = [
+        ("unified", UnifiedTierPlanner()),
+        ("priors_only", PriorsOnlyPlanner(seed=seed)),
+        ("interview_only", InterviewOnlyPlanner(seed=seed)),
+        ("full_rag", RAGPlanner(seed=seed)),
+        ("oracle_weights", OracleWeightsPlanner(seed=seed)),
+    ]
+    t0 = time.time()
+    out = {}
+    for name, planner in variants:
+        sat, en = run(planner, users, fleet)
+        out[name] = (sat, en)
+        if not csv:
+            print(f"{name:15s} satisfaction={sat:.3f} rel_energy={en:.3f}")
+    if csv:
+        us = (time.time() - t0) / len(variants) * 1e6
+        for name, (sat, en) in out.items():
+            print(f"ablation_{name},{us:.0f},sat={sat:.3f};energy={en:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks: Pallas (interpret mode on CPU — indicative only;
+the BlockSpec tiling is the TPU artifact) vs the pure-jnp references, plus
+the OTA communication-cost table (channel uses: OTA vs digital uplink).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ota
+from repro.core.quant import qrange
+from repro.kernels import ops, ref
+
+
+def _time(fn: Callable, *args, reps: int = 5) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def main(csv: bool = False):
+    rows = []
+    x = jnp.asarray(np.random.RandomState(0).randn(1 << 16), jnp.float32)
+    scale = jnp.max(jnp.abs(x)) / qrange(8)
+    rows.append(("fake_quant_pallas_64k", _time(
+        lambda v: ops.fake_quant(v, 8), x), "interpret"))
+    rows.append(("fake_quant_jnp_64k", _time(
+        jax.jit(lambda v: ref.fake_quant_ref(v, scale, 8)), x), "ref"))
+
+    K, M = 10, 1 << 15
+    xs = jnp.asarray(np.random.RandomState(1).randn(K, M), jnp.float32)
+    w = jnp.ones((K,)) / K
+    noise = jnp.zeros((M,))
+    rows.append(("ota_aggregate_pallas_10x32k", _time(
+        lambda a: ops.ota_aggregate(a, w, noise, jnp.float32(0.1)), xs),
+        "interpret"))
+    rows.append(("ota_aggregate_jnp_10x32k", _time(
+        jax.jit(lambda a: ref.ota_aggregate_ref(a, w, noise, 0.1)), xs),
+        "ref"))
+
+    xx = jnp.asarray(np.random.RandomState(2).randn(256, 512), jnp.float32)
+    ww = jnp.asarray(np.random.RandomState(3).randn(512, 256), jnp.float32)
+    wq, sc = ops.quantize_weights(ww, 8)
+    rows.append(("qmatmul_pallas_256x512x256", _time(
+        lambda a: ops.qmatmul(a, wq, sc), xx), "interpret"))
+    rows.append(("qmatmul_jnp_256x512x256", _time(
+        jax.jit(lambda a: ref.qmatmul_ref(a, wq, sc)), xx), "ref"))
+
+    # OTA vs digital uplink channel uses (the MP-OTA-FL efficiency table)
+    n_params = 5_000_000
+    bits = [4, 8, 8, 16, 16, 16, 32] * 3  # a 21-client round
+    uses_ota = ota.channel_uses(bits, n_params)
+    uses_dig = ota.digital_uplink_bits(bits, n_params)
+    rows.append(("ota_channel_uses_21clients", uses_ota, "symbols"))
+    rows.append(("digital_uplink_bits_21clients", uses_dig,
+                 f"{uses_dig/ (uses_ota*32):.1f}x OTA cost at 32b/symbol"))
+
+    for name, val, extra in rows:
+        print(f"{name},{val:.0f},{extra}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/dryrun_results.json (produced by repro.launch.dryrun) and
+prints per (arch x shape): the three roofline terms, the bottleneck, and
+MODEL_FLOPS / HLO_FLOPs utilisation.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+N_CHIPS = 256  # single-pod table
+
+HERE = os.path.dirname(__file__)
+RESULTS = os.path.join(HERE, "dryrun_results.json")
+
+
+def load(multi_pod: bool = False) -> List[Dict]:
+    with open(RESULTS) as f:
+        rs = json.load(f)
+    return [r for r in rs
+            if r.get("multi_pod", False) == multi_pod
+            and r.get("status") == "ok"]
+
+
+def rows(multi_pod: bool = False) -> List[Dict]:
+    out = []
+    for r in sorted(load(multi_pod), key=lambda r: (r["arch"], r["shape"])):
+        flops = r.get("flops_extrap") or r.get("flops") or 0
+        model_fl = (r.get("model_flops") or 0) / N_CHIPS  # per chip
+        out.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_compute": r["t_compute_s"], "t_memory": r["t_memory_s"],
+            "t_collective": r["t_collective_s"],
+            "bottleneck": r["bottleneck"],
+            "useful_ratio": model_fl / flops if flops else float("nan"),
+            "params": r.get("n_params"),
+            "compile_s": r.get("compile_s"),
+        })
+    return out
+
+
+def main(csv: bool = False):
+    table = rows()
+    if not table:
+        print("no dry-run results yet; run: python -m repro.launch.dryrun --all")
+        return []
+    if csv:
+        for r in table:
+            print(f"roofline_{r['arch']}_{r['shape']},"
+                  f"{max(r['t_compute'], r['t_memory'], r['t_collective'])*1e6:.0f},"
+                  f"bottleneck={r['bottleneck']};useful={r['useful_ratio']:.2f}")
+    else:
+        hdr = (f"{'arch':18s} {'shape':12s} {'t_comp(s)':>10s} "
+               f"{'t_mem(s)':>10s} {'t_coll(s)':>10s} {'bound':>10s} "
+               f"{'useful':>7s}")
+        print(hdr)
+        for r in table:
+            print(f"{r['arch']:18s} {r['shape']:12s} "
+                  f"{r['t_compute']:10.3g} {r['t_memory']:10.3g} "
+                  f"{r['t_collective']:10.3g} {r['bottleneck']:>10s} "
+                  f"{r['useful_ratio']:7.2f}")
+    return table
+
+
+if __name__ == "__main__":
+    main()

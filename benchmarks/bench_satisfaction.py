@@ -1,0 +1,71 @@
+"""Paper Fig. 3 — satisfaction-score and relative-energy-cost distributions
+under (a) unified-tier planning, (b) RAG-personalized planning, and
+(c) RAG with server-side energy priority.
+
+100 simulated clients (Gaussian sensitivities, Table-I contexts), several
+feedback rounds so the RAG databases warm up, oracle-scored.
+"""
+from __future__ import annotations
+
+import time
+from collections import Counter
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.profiling import (RAGPlanner, UnifiedTierPlanner, make_fleet,
+                                  make_users, plan_round, satisfaction_score,
+                                  true_performance)
+
+
+def run_planner(planner, users, fleet, rounds: int = 6):
+    sats, energies, hist = [], [], Counter()
+    for r in range(rounds):
+        decisions = plan_round(planner.plan(users, fleet))
+        for d, u, s in zip(decisions, users, fleet):
+            sat = satisfaction_score(u, s, d.bits)
+            perf = true_performance(u, s, d.bits)
+            planner.observe_feedback(u, s, d.bits, sat, perf)
+            if r == rounds - 1:
+                sats.append(sat)
+                energies.append(perf["energy"])
+                hist[d.bits] += 1
+    return np.array(sats), np.array(energies), dict(sorted(hist.items()))
+
+
+def main(n_clients: int = 100, rounds: int = 6, seed: int = 0,
+         csv: bool = False) -> Dict[str, Tuple[float, float]]:
+    users = make_users(n_clients, seed=seed)
+    fleet = make_fleet(n_clients, seed=seed)
+    settings = [
+        ("unified", UnifiedTierPlanner()),
+        ("rag", RAGPlanner(seed=seed)),
+        ("rag_energy", RAGPlanner(seed=seed, energy_priority=8.0)),
+    ]
+    out = {}
+    t0 = time.time()
+    for name, planner in settings:
+        sats, ens, hist = run_planner(planner, users, fleet, rounds)
+        out[name] = (float(sats.mean()), float(ens.mean()))
+        if not csv:
+            print(f"{name:11s} satisfaction={sats.mean():.3f}"
+                  f"±{sats.std():.3f}  rel_energy={ens.mean():.3f}"
+                  f"±{ens.std():.3f}  bits={hist}")
+    u, r, e = out["unified"], out["rag"], out["rag_energy"]
+    if not csv:
+        print(f"-- paper Fig.3 claims: personalized +10% satisfaction, "
+              f"-20% energy; energy-priority trades satisfaction for "
+              f"further savings")
+        print(f"   ours: rag {100*(r[0]-u[0])/u[0]:+.1f}% satisfaction, "
+              f"{100*(r[1]-u[1])/u[1]:+.1f}% energy; "
+              f"rag_energy {100*(e[0]-u[0])/u[0]:+.1f}% satisfaction, "
+              f"{100*(e[1]-u[1])/u[1]:+.1f}% energy")
+    else:
+        us = (time.time() - t0) / 3 * 1e6
+        for name, (s, en) in out.items():
+            print(f"fig3_{name},{us:.0f},sat={s:.3f};energy={en:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

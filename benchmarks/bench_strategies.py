@@ -1,0 +1,75 @@
+"""Paper Fig. 4 — per-class global-model accuracy under the three server
+contribution strategies: (a) default FedAvg, (b) class-equal (boost
+minority-class clients' precision), (c) majority-centric.
+
+Runs the full MP-OTA-FL loop (quantized local training + OTA aggregation)
+on the synthetic voice corpus at reduced scale; reports char accuracy per
+category. The paper's effect: vs FedAvg, class-equal trades majority
+accuracy for minority accuracy, majority-centric the reverse.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.profiling.users import CATEGORIES
+from repro.data.voice import make_eval_set
+from repro.fl import FLServer
+
+MINORITY = ("smart_home", "personal_request")
+MAJORITY = ("entertainment", "general_query")
+
+
+def run_strategy(strategy: str, *, rounds: int, n_clients: int,
+                 per_round: int, seed: int) -> Dict[str, float]:
+    cfg = FLConfig(n_clients=n_clients, clients_per_round=per_round,
+                   n_rounds=rounds, local_steps=3, local_batch=6,
+                   lr=2e-3, planner="rag", strategy=strategy, seed=seed)
+    srv = FLServer(cfg, shard_size=16)
+    srv.run(rounds)
+    acc = srv.evaluate(make_eval_set(n=96, seed=seed + 555), with_loss=True)
+    acc["_loss"] = srv.round_logs[-1].train_loss
+    return acc
+
+
+def main(rounds: int = 10, n_clients: int = 24, per_round: int = 6,
+         seed: int = 0, csv: bool = False):
+    results = {}
+    t0 = time.time()
+    for strat in ("fedavg", "class_equal", "majority_centric"):
+        results[strat] = run_strategy(strat, rounds=rounds,
+                                      n_clients=n_clients,
+                                      per_round=per_round, seed=seed)
+        if not csv:
+            accs = {c: round(results[strat][c], 3) for c in CATEGORIES}
+            print(f"{strat:17s} {accs} loss={results[strat]['_loss']:.3f}")
+    if not csv:
+        fa = results["fedavg"]
+        for strat in ("class_equal", "majority_centric"):
+            r = results[strat]
+            d_min = np.mean([r[c] - fa[c] for c in MINORITY])
+            d_maj = np.mean([r[c] - fa[c] for c in MAJORITY])
+            # per-category CTC loss deltas (negative = better for that
+            # class) — sensitive during CTC's blank-collapse phase where
+            # the decode-accuracy metric is still flat
+            dl_min = np.mean([r["loss_" + c] - fa["loss_" + c]
+                              for c in MINORITY])
+            dl_maj = np.mean([r["loss_" + c] - fa["loss_" + c]
+                              for c in MAJORITY])
+            print(f"-- {strat} vs fedavg: acc minority {d_min:+.3f} / "
+                  f"majority {d_maj:+.3f}; CTC-loss minority {dl_min:+.3f} "
+                  f"/ majority {dl_maj:+.3f} "
+                  f"(paper: class_equal +5%/-2%, majority_centric -3%/+4%)")
+    else:
+        us = (time.time() - t0) / 3 * 1e6
+        for strat, r in results.items():
+            payload = ";".join(f"{c}={r[c]:.3f}" for c in CATEGORIES)
+            print(f"fig4_{strat},{us:.0f},{payload}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark entrypoint — one benchmark per paper table/figure plus the
+assignment's roofline table. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --quick    # skip FL training
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the FL-training benchmark (Fig. 4)")
+    ap.add_argument("--fig4-rounds", type=int, default=10)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    from benchmarks import bench_kernels
+    bench_kernels.main(csv=True)
+
+    from benchmarks import bench_satisfaction
+    bench_satisfaction.main(csv=True)
+
+    from benchmarks import bench_ablation
+    bench_ablation.main(csv=True)
+
+    from benchmarks import bench_roofline
+    bench_roofline.main(csv=True)
+
+    if not args.quick:
+        from benchmarks import bench_strategies
+        bench_strategies.main(rounds=args.fig4_rounds, csv=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,52 @@
+"""Continuous-batching inference: the serve engine under a request mix.
+
+Submits a burst of variable-length requests against a 4-slot engine and
+shows slot reuse / throughput — the runtime behaviour the decode_32k /
+long_500k dry-run shapes correspond to at pod scale.
+
+  PYTHONPATH=src python examples/continuous_batching.py
+  PYTHONPATH=src python examples/continuous_batching.py --arch falcon-mamba-7b
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.serve import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    eng = ServeEngine(cfg, max_batch=args.max_batch, cache_len=128)
+    rng = np.random.RandomState(args.seed)
+    for i in range(args.requests):
+        prompt = rng.randint(0, cfg.vocab_size,
+                             size=int(rng.randint(4, 16))).astype(np.int32)
+        eng.submit(Request(i, prompt,
+                           max_new_tokens=int(rng.randint(8, 24))))
+
+    t0 = time.time()
+    done = eng.run_until_drained()
+    dt = time.time() - t0
+    s = eng.stats()
+    print(f"arch={cfg.name} slots={args.max_batch} "
+          f"requests={len(done)}/{args.requests}")
+    print(f"decode steps: {s['decode_steps']}  tokens: {s['tokens']}  "
+          f"tokens/step: {s['tokens_per_step']:.2f} "
+          f"(continuous batching keeps slots busy)")
+    print(f"wall: {dt:.1f}s  mean request latency: {s['mean_latency_s']:.2f}s")
+    for r in done[:4]:
+        print(f"  req {r.request_id}: prompt {len(r.prompt)} tok -> "
+              f"generated {len(r.generated)} tok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_REGISTRY,
+    ArchConfig,
+    BITS_TO_LEVEL,
+    FLConfig,
+    INPUT_SHAPES,
+    InputShape,
+    PRECISION_LEVELS,
+    PrecisionLevel,
+    get_arch,
+    list_archs,
+    register_arch,
+)

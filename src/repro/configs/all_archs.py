@@ -1,0 +1,28 @@
+"""Import side-effect module: registers every assigned architecture."""
+# The 10 assigned architectures
+import repro.configs.kimi_k2_1t_a32b  # noqa: F401
+import repro.configs.zamba2_2p7b  # noqa: F401
+import repro.configs.stablelm_1p6b  # noqa: F401
+import repro.configs.qwen3_8b  # noqa: F401
+import repro.configs.qwen2_vl_2b  # noqa: F401
+import repro.configs.deepseek_67b  # noqa: F401
+import repro.configs.whisper_tiny  # noqa: F401
+import repro.configs.qwen1p5_110b  # noqa: F401
+import repro.configs.falcon_mamba_7b  # noqa: F401
+import repro.configs.arctic_480b  # noqa: F401
+
+# The paper's own model
+import repro.configs.deepspeech2_paper  # noqa: F401
+
+ASSIGNED_ARCHS = (
+    "kimi-k2-1t-a32b",
+    "zamba2-2.7b",
+    "stablelm-1.6b",
+    "qwen3-8b",
+    "qwen2-vl-2b",
+    "deepseek-67b",
+    "whisper-tiny",
+    "qwen1.5-110b",
+    "falcon-mamba-7b",
+    "arctic-480b",
+)

@@ -1,0 +1,26 @@
+"""arctic-480b — 128-expert top-2 MoE with dense residual MLP.
+[hf:Snowflake/snowflake-arctic-base]
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch("arctic-480b")
+def arctic_480b() -> ArchConfig:
+    return ArchConfig(
+        name="arctic-480b",
+        family="moe",
+        n_layers=35,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=4864,           # dense-residual MLP width
+        moe_d_ff=4864,       # expert FFN width
+        n_experts=128,
+        experts_per_token=2,
+        dense_residual=True,  # dense MLP in parallel with the MoE branch
+        vocab_size=32_000,
+        source="hf:Snowflake/snowflake-arctic-base",
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        remat=True,
+    )

@@ -1,0 +1,277 @@
+"""Config system: architecture, input shapes, FL experiment, precision levels.
+
+Everything is a frozen dataclass so configs hash/compare cleanly and can be
+used as jit static arguments. Arch configs for the 10 assigned architectures
+live in sibling modules (one file per arch) and register themselves in
+``ARCH_REGISTRY`` via :func:`register_arch`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """Static description of a transformer-family architecture."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    source: str = ""  # citation per the assignment table
+
+    # Attention flavour flags
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    mrope: bool = False  # sectioned multimodal RoPE (qwen2-vl)
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
+    router_aux_coef: float = 0.01
+
+    # SSM (mamba1/mamba2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    d_inner: int = 0  # 0 -> 2 * d_model
+    ssm_heads: int = 0  # mamba2 heads; 0 -> d_inner // 64
+    dt_rank: int = 0  # mamba1 dt projection rank; 0 -> d_model // 16
+
+    # Hybrid (zamba2): a shared attention block applied every `attn_every`
+    # SSM layers (weights shared across applications, per the Zamba design).
+    attn_every: int = 0
+
+    # Encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 1500  # whisper: 30 s of audio at 50 Hz after conv
+
+    # Modality frontend stub ("none" | "audio" | "vision")
+    frontend: str = "none"
+    frontend_dim: int = 0  # embedding dim delivered by the stub
+
+    # Decode
+    window: int = 8192  # sliding-window KV cache size for long-context decode
+
+    # Numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: bool = False
+
+    # Lowering controls (dry-run cost calibration; see launch/dryrun.py).
+    # XLA cost_analysis counts scan bodies ONCE — unrolled variants give
+    # true per-layer HLO costs which the dry-run extrapolates to full depth.
+    unroll_layers: bool = False
+    unroll_attn: bool = False
+    attn_chunk: int = 1024
+    loss_chunk: int = 512
+    # Use the Pallas flash-attention kernel for full-sequence causal
+    # attention (TPU; interpret-mode on CPU — correct but slow, so tests
+    # opt in explicitly). Falls back to the jnp chunked path for windowed
+    # or non-causal attention.
+    use_flash_kernel: bool = False
+
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def resolved_d_inner(self) -> int:
+        return self.d_inner or 2 * self.d_model
+
+    def resolved_ssm_heads(self) -> int:
+        return self.ssm_heads or max(1, self.resolved_d_inner() // 64)
+
+    def resolved_dt_rank(self) -> int:
+        return self.dt_rank or max(1, self.d_model // 16)
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: 2 layers, d_model<=256, <=4 experts."""
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4)
+        n_kv = min(self.n_kv_heads, n_heads) if self.n_kv_heads else 0
+        kw: Dict[str, Any] = dict(
+            name=self.name + "-reduced",
+            n_layers=2,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=max(1, n_kv),
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=0,
+            d_inner=0,
+            dt_rank=0,
+            ssm_heads=0,
+            window=64,
+            remat=False,
+            param_dtype="float32",
+            compute_dtype="float32",
+        )
+        if self.n_experts:
+            kw.update(
+                n_experts=min(self.n_experts, 4),
+                experts_per_token=min(self.experts_per_token, 2),
+                moe_d_ff=min(self.moe_d_ff or self.d_ff, 256),
+            )
+        if self.attn_every:
+            kw.update(attn_every=1, n_layers=2)
+        if self.encoder_layers:
+            kw.update(encoder_layers=2, encoder_seq=32)
+        if self.frontend != "none":
+            kw.update(frontend_dim=d_model)
+        if self.mrope:
+            # rescale M-RoPE sections to the reduced head_dim
+            half = (d_model // n_heads) // 2
+            t = max(1, half // 4)
+            rest = (half - t) // 2
+            kw.update(mrope_sections=(t, rest, half - t - rest))
+        return self.with_(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Precision levels (the paper's quantization control variable)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PrecisionLevel:
+    """One selectable client precision level.
+
+    ``bits`` drives both quantization and the analytic energy model:
+    compute energy per MAC scales ~bits^2 (CMOS multiplier), comms energy
+    scales ~bits. ``rel_energy`` is relative to the 32-bit level, matching
+    the paper's "Relative Energy Cost" metric.
+    """
+
+    bits: int
+
+    @property
+    def rel_energy(self) -> float:
+        # Sub-quadratic in practice: memory traffic, control overheads and
+        # fixed radio cost flatten the CMOS bits^2 MAC curve on real devices.
+        compute = (self.bits / 32.0) ** 0.9
+        overhead = (self.bits / 32.0) ** 0.45
+        return 0.55 * compute + 0.45 * overhead
+
+    @property
+    def rel_latency(self) -> float:
+        # Lower precision -> faster MACs and smaller transfers.
+        return 0.5 * (self.bits / 32.0) + 0.5 * (self.bits / 32.0) ** 0.5
+
+    @property
+    def rel_accuracy(self) -> float:
+        # PTQ accuracy-retention prior (quiet conditions), per bit width.
+        return {4: 0.75, 8: 0.93, 16: 0.99, 32: 1.0}[self.bits]
+
+    @property
+    def noise_sensitivity(self) -> float:
+        # additional accuracy degradation per unit ambient noise (quantized
+        # ASR is less noise-robust at low precision).
+        return {4: 0.35, 8: 0.15, 16: 0.05, 32: 0.02}[self.bits]
+
+
+PRECISION_LEVELS: Tuple[PrecisionLevel, ...] = tuple(
+    PrecisionLevel(b) for b in (4, 8, 16, 32)
+)
+BITS_TO_LEVEL = {p.bits: p for p in PRECISION_LEVELS}
+
+
+# ---------------------------------------------------------------------------
+# FL experiment config (paper §IV)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    n_clients: int = 100
+    clients_per_round: int = 20
+    n_rounds: int = 100
+    local_steps: int = 4
+    local_batch: int = 8
+    lr: float = 5e-4
+    strategy: str = "fedavg"  # fedavg | class_equal | majority_centric
+    planner: str = "rag"  # rag | unified | rag_energy
+    snr_db: float = 20.0
+    seed: int = 0
+    # robustness options
+    dropout_prob: float = 0.0   # straggler/device dropout per round
+    fedprox_mu: float = 0.0     # proximal term pulling local weights to global
+    server_momentum: float = 0.0  # FedAvgM velocity on the aggregated update
+    # paper Table II category mixture
+    categories: Tuple[str, ...] = (
+        "entertainment",
+        "smart_home",
+        "general_query",
+        "personal_request",
+    )
+    category_probs: Tuple[float, ...] = (0.327, 0.160, 0.319, 0.194)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_REGISTRY: Dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register_arch(name: str):
+    def deco(fn: Callable[[], ArchConfig]):
+        ARCH_REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_arch(name: str) -> ArchConfig:
+    """Look up an architecture config by id (importing config modules)."""
+    import repro.configs.all_archs  # noqa: F401  (side-effect registration)
+
+    if name not in ARCH_REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; known: {sorted(ARCH_REGISTRY)}"
+        )
+    return ARCH_REGISTRY[name]()
+
+
+def list_archs() -> Tuple[str, ...]:
+    import repro.configs.all_archs  # noqa: F401
+
+    return tuple(sorted(ARCH_REGISTRY))

@@ -1,0 +1,20 @@
+"""deepseek-67b — dense llama-arch, GQA kv=8. [arXiv:2401.02954]"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch("deepseek-67b")
+def deepseek_67b() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-67b",
+        family="dense",
+        n_layers=95,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=22016,
+        vocab_size=102_400,
+        source="arXiv:2401.02954",
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        remat=True,
+    )

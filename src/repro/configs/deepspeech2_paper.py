@@ -1,0 +1,26 @@
+"""DeepSpeech2-style ASR model used by the paper's FL experiment (§IV-A).
+
+Paper: Amodei et al., "Deep Speech 2" [arXiv:1512.02595]; the paper trains
+it federated on Common Voice filtered to 4 smart-assistant categories.
+We keep the conv + bidirectional-RNN + CTC structure at a size suitable
+for 100-client CPU simulation. Registered as an arch so the generic
+launch/driver tooling can select it with --arch deepspeech2.
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch("deepspeech2")
+def deepspeech2_paper() -> ArchConfig:
+    return ArchConfig(
+        name="deepspeech2",
+        family="ds2",
+        n_layers=3,          # bi-GRU layers
+        d_model=256,         # RNN hidden size
+        n_heads=1,
+        n_kv_heads=1,
+        d_ff=0,
+        vocab_size=64,       # char-level vocab for synthetic commands
+        frontend="audio",
+        frontend_dim=80,     # mel-feature dim delivered by the (synthetic) frontend
+        source="arXiv:1512.02595",
+    )

@@ -1,0 +1,22 @@
+"""falcon-mamba-7b — attention-free Mamba-1 SSM. [arXiv:2410.05355]"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch("falcon-mamba-7b")
+def falcon_mamba_7b() -> ArchConfig:
+    return ArchConfig(
+        name="falcon-mamba-7b",
+        family="ssm",
+        n_layers=64,
+        d_model=4096,
+        n_heads=1,          # attention-free
+        n_kv_heads=1,
+        d_ff=0,             # no MLP — mamba block is the whole layer
+        vocab_size=65_024,
+        ssm_state=16,
+        ssm_conv=4,
+        source="arXiv:2410.05355",
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        remat=True,
+    )

@@ -1,0 +1,23 @@
+"""kimi-k2-1t-a32b — trillion-param MoE (paper-table). [arXiv:2501.kimi2]"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch("kimi-k2-1t-a32b")
+def kimi_k2_1t_a32b() -> ArchConfig:
+    return ArchConfig(
+        name="kimi-k2-1t-a32b",
+        family="moe",
+        n_layers=61,
+        d_model=7168,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=2048,          # expert FFN width (MoE 384e top-8)
+        moe_d_ff=2048,
+        n_experts=384,
+        experts_per_token=8,
+        vocab_size=163_840,
+        source="arXiv:2501.kimi2",
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        remat=True,
+    )

@@ -1,0 +1,21 @@
+"""qwen1.5-110b — dense, QKV bias. [hf:Qwen/Qwen1.5-0.5B]"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch("qwen1.5-110b")
+def qwen1p5_110b() -> ArchConfig:
+    return ArchConfig(
+        name="qwen1.5-110b",
+        family="dense",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=49152,
+        vocab_size=152_064,
+        qkv_bias=True,
+        source="hf:Qwen/Qwen1.5-0.5B",
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        remat=True,
+    )

@@ -1,0 +1,32 @@
+"""qwen2-vl-2b — VLM backbone, M-RoPE, GQA kv=2. [arXiv:2409.12191]
+
+The ViT vision encoder + projector is a STUB per the assignment carve-out:
+``input_specs()`` delivers precomputed patch embeddings of shape
+(batch, n_patches, d_model); this config describes the language decoder
+that consumes them (patch embeddings are prepended to token embeddings).
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch("qwen2-vl-2b")
+def qwen2_vl_2b() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2-vl-2b",
+        family="vlm",
+        n_layers=28,
+        d_model=1536,
+        n_heads=12,
+        n_kv_heads=2,
+        d_ff=8960,
+        vocab_size=151_936,
+        qkv_bias=True,
+        mrope=True,
+        mrope_sections=(16, 24, 24),  # temporal / height / width RoPE split
+        rope_theta=1_000_000.0,
+        frontend="vision",
+        frontend_dim=1536,
+        source="arXiv:2409.12191",
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        remat=True,
+    )

@@ -1,0 +1,22 @@
+"""qwen3-8b — dense, GQA kv=8, qk-norm. [hf:Qwen/Qwen3-8B]"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch("qwen3-8b")
+def qwen3_8b() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-8b",
+        family="dense",
+        n_layers=36,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=12288,
+        vocab_size=151_936,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        source="hf:Qwen/Qwen3-8B",
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        remat=True,
+    )

@@ -1,0 +1,20 @@
+"""stablelm-1.6b — dense. [hf:stabilityai/stablelm-2-1_6b]"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch("stablelm-1.6b")
+def stablelm_1p6b() -> ArchConfig:
+    return ArchConfig(
+        name="stablelm-1.6b",
+        family="dense",
+        n_layers=24,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=5632,
+        vocab_size=100_352,
+        source="hf:stabilityai/stablelm-2-1_6b",
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        remat=True,
+    )

@@ -1,0 +1,30 @@
+"""whisper-tiny — enc-dec audio, conv frontend stubbed. [arXiv:2212.04356]
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment
+carve-out: ``input_specs()`` delivers precomputed frame embeddings of shape
+(batch, encoder_seq, d_model). Encoder (bidirectional self-attn, sinusoidal
+positions) and decoder (causal self-attn + cross-attn) are fully implemented.
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch("whisper-tiny")
+def whisper_tiny() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-tiny",
+        family="audio",
+        n_layers=4,           # decoder layers
+        encoder_layers=4,
+        encoder_seq=1500,
+        d_model=384,
+        n_heads=6,
+        n_kv_heads=6,
+        d_ff=1536,
+        vocab_size=51_865,
+        rope_theta=0.0,       # whisper uses learned/sinusoidal positions
+        frontend="audio",
+        frontend_dim=384,
+        source="arXiv:2212.04356",
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+    )

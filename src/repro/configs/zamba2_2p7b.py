@@ -1,0 +1,23 @@
+"""zamba2-2.7b — Mamba2 backbone + shared attention blocks. [arXiv:2411.15242]"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch("zamba2-2.7b")
+def zamba2_2p7b() -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-2.7b",
+        family="hybrid",
+        n_layers=54,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=10240,
+        vocab_size=32_000,
+        ssm_state=64,
+        ssm_conv=4,
+        attn_every=6,  # shared attention block applied every 6 mamba2 layers
+        source="arXiv:2411.15242",
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        remat=True,
+    )

@@ -1,0 +1,1 @@
+from repro.core import ota, quant  # noqa: F401

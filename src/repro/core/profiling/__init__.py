@@ -1,0 +1,6 @@
+from repro.core.profiling.hardware import DeviceSpec, make_fleet, hardware_tier, max_feasible_bits  # noqa: F401
+from repro.core.profiling.users import UserTruth, make_users, satisfaction_score, true_performance  # noqa: F401
+from repro.core.profiling.interview import InterviewAgent, SimLLM, InferredProfile  # noqa: F401
+from repro.core.profiling.ragdb import ContextQuantFeedbackDB, HardwareQuantPerfDB, VectorStore  # noqa: F401
+from repro.core.profiling.evaluator import evaluate_levels, select_level, contribution_multiplier  # noqa: F401
+from repro.core.profiling.planner import RAGPlanner, UnifiedTierPlanner, PlanDecision, plan_round  # noqa: F401

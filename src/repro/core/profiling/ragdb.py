@@ -1,0 +1,133 @@
+"""RAG knowledge databases (the paper's §III-B2).
+
+Two stores, both built on a feature-hashed vector index with cosine
+retrieval (pure numpy; an embedding-model-backed store is a drop-in —
+the interface is add/query):
+
+- ``ContextQuantFeedbackDB``: archives (context features, assigned bits,
+  realised feedback/satisfaction) per round — "semantic mappings between
+  contextual factors and user factors".
+- ``HardwareQuantPerfDB``: archives (hardware features, bits) ->
+  measured (accuracy, energy, latency) — the quantization-performance
+  trade-off store queried by hardware similarity.
+
+Records append continuously ("facilitating continuous refinement").
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+EMBED_DIM = 256
+
+
+def _hash_idx(token: str) -> Tuple[int, float]:
+    h = hashlib.blake2b(token.encode(), digest_size=8).digest()
+    idx = int.from_bytes(h[:4], "little") % EMBED_DIM
+    sign = 1.0 if h[4] & 1 else -1.0
+    return idx, sign
+
+
+def embed_features(features: Dict[str, float]) -> np.ndarray:
+    """Feature-hash a {name: weight} dict into a unit vector."""
+    v = np.zeros(EMBED_DIM, np.float32)
+    for name, w in features.items():
+        idx, sign = _hash_idx(name)
+        v[idx] += sign * float(w)
+    n = np.linalg.norm(v)
+    return v / n if n > 0 else v
+
+
+@dataclasses.dataclass
+class Record:
+    features: Dict[str, float]
+    payload: Dict[str, Any]
+
+
+class VectorStore:
+    def __init__(self):
+        self._vecs: List[np.ndarray] = []
+        self._records: List[Record] = []
+        self._matrix: Optional[np.ndarray] = None
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def add(self, features: Dict[str, float], payload: Dict[str, Any]) -> None:
+        self._vecs.append(embed_features(features))
+        self._records.append(Record(features, payload))
+        self._matrix = None  # invalidate
+
+    def query(self, features: Dict[str, float], k: int = 8) -> List[Tuple[float, Record]]:
+        if not self._records:
+            return []
+        if self._matrix is None:
+            self._matrix = np.stack(self._vecs)
+        q = embed_features(features)
+        sims = self._matrix @ q
+        k = min(k, len(sims))
+        top = np.argpartition(-sims, k - 1)[:k]
+        top = top[np.argsort(-sims[top])]
+        return [(float(sims[i]), self._records[i]) for i in top]
+
+
+class ContextQuantFeedbackDB(VectorStore):
+    """context/preference features + bits -> realised satisfaction feedback."""
+
+    def add_feedback(self, features: Dict[str, float], bits: int,
+                     satisfaction: float, perf: Dict[str, float]) -> None:
+        self.add(features, {"bits": bits, "satisfaction": satisfaction,
+                            "perf": dict(perf)})
+
+    def estimate_satisfaction(
+        self, features: Dict[str, float], bits: int, k: int = 8
+    ) -> Optional[Tuple[float, float]]:
+        """(estimate, confidence) for assigning ``bits`` under ``features``.
+
+        Retrieval is context-wide; matching-bit neighbours weigh fully,
+        near-bit neighbours partially (quantization effects are smooth
+        in log-bits).
+        """
+        hits = self.query(features, k=k * 4)
+        if not hits:
+            return None
+        num = den = 0.0
+        for sim, rec in hits:
+            if sim <= 0:
+                continue
+            db = abs(np.log2(rec.payload["bits"]) - np.log2(bits))
+            bit_w = max(0.0, 1.0 - 0.5 * db)
+            w = sim * bit_w
+            num += w * rec.payload["satisfaction"]
+            den += w
+        if den < 1e-6:
+            return None
+        conf = min(1.0, den / 3.0)
+        return num / den, conf
+
+
+class HardwareQuantPerfDB(VectorStore):
+    """hardware features + bits -> measured perf dict."""
+
+    def add_measurement(self, hw_features: Dict[str, float], bits: int,
+                        perf: Dict[str, float]) -> None:
+        self.add(hw_features, {"bits": bits, "perf": dict(perf)})
+
+    def estimate_perf(
+        self, hw_features: Dict[str, float], bits: int, k: int = 8
+    ) -> Optional[Dict[str, float]]:
+        hits = self.query(hw_features, k=k * 4)
+        agg: Dict[str, float] = {}
+        den = 0.0
+        for sim, rec in hits:
+            if sim <= 0 or rec.payload["bits"] != bits:
+                continue
+            for name, val in rec.payload["perf"].items():
+                agg[name] = agg.get(name, 0.0) + sim * val
+            den += sim
+        if den < 1e-6:
+            return None
+        return {name: v / den for name, v in agg.items()}

@@ -1,0 +1,132 @@
+"""Uniform affine quantization — the MP-OTA-FL data-plane primitive.
+
+Precision levels follow ``repro.configs.PRECISION_LEVELS`` ({4, 8, 16, 32}
+bits). 32 means "no quantization". Per-tensor symmetric scales (the
+mixed-precision modulation scheme of the paper's ref [2] aligns symmetric
+integer grids across clients, so symmetric quantization is the faithful
+choice).
+
+The jnp implementations here are the *reference semantics*; the Pallas
+kernels in ``repro.kernels`` implement the same ops for TPU and are tested
+against these (see kernels/*/ref.py which re-export from here).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def qrange(bits: int) -> int:
+    """Symmetric integer range: values in [-qmax, qmax]."""
+    return 2 ** (bits - 1) - 1
+
+
+def quantize(
+    x: jnp.ndarray, bits: int, *, key: Optional[jax.Array] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric quantization.
+
+    Returns (q int32, scale f32 scalar). With ``key``, rounding is
+    stochastic (unbiased — the property OTA aggregation relies on: the
+    expected dequantized sum equals the true sum).
+    """
+    if bits >= 32:
+        return x.astype(jnp.float32), jnp.ones((), jnp.float32)
+    qmax = qrange(bits)
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    scaled = x.astype(jnp.float32) / scale
+    if key is not None:
+        floor = jnp.floor(scaled)
+        frac = scaled - floor
+        rnd = jax.random.uniform(key, x.shape)
+        q = floor + (rnd < frac).astype(jnp.float32)
+    else:
+        q = jnp.round(scaled)
+    q = jnp.clip(q, -qmax, qmax)
+    return q.astype(jnp.int32), scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    if bits >= 32:
+        return q.astype(jnp.float32)
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(
+    x: jnp.ndarray, bits: int, *, key: Optional[jax.Array] = None
+) -> jnp.ndarray:
+    """quantize → dequantize (the client-side model degradation at level b)."""
+    if bits >= 32:
+        return x
+    q, scale = quantize(x, bits, key=key)
+    return dequantize(q, scale, bits).astype(x.dtype)
+
+
+@jax.custom_vjp
+def ste_fake_quant(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Fake-quant with straight-through gradients (for QAT local training)."""
+    return fake_quant(x, bits)
+
+
+def _ste_fwd(x, bits):
+    return fake_quant(x, bits), None
+
+
+def _ste_bwd(_, g):
+    return (g, None)
+
+
+ste_fake_quant.defvjp(_ste_fwd, _ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# pytree-level helpers (client model / update quantization)
+# ---------------------------------------------------------------------------
+
+
+def quantize_tree(
+    tree: Pytree, bits: int, *, key: Optional[jax.Array] = None
+) -> Tuple[Pytree, Pytree]:
+    """Quantize every leaf per-tensor. Returns (q_tree, scale_tree)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if key is not None:
+        keys = list(jax.random.split(key, len(leaves)))
+    else:
+        keys = [None] * len(leaves)
+    qs, scales = [], []
+    for leaf, k in zip(leaves, keys):
+        q, s = quantize(leaf, bits, key=k)
+        qs.append(q)
+        scales.append(s)
+    return jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, scales)
+
+
+def dequantize_tree(q_tree: Pytree, scale_tree: Pytree, bits: int) -> Pytree:
+    return jax.tree.map(lambda q, s: dequantize(q, s, bits), q_tree, scale_tree)
+
+
+def fake_quant_tree(
+    tree: Pytree, bits: int, *, key: Optional[jax.Array] = None
+) -> Pytree:
+    if bits >= 32:
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    if key is not None:
+        keys = list(jax.random.split(key, len(leaves)))
+    else:
+        keys = [None] * len(leaves)
+    out = [fake_quant(leaf, bits, key=k) for leaf, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def quant_error(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """RMS relative quantization error (used by perf/accuracy priors)."""
+    fq = fake_quant(x, bits)
+    return jnp.sqrt(jnp.mean((x - fq) ** 2)) / jnp.maximum(
+        jnp.sqrt(jnp.mean(x ** 2)), 1e-12
+    )

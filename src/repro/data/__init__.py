@@ -1,0 +1,6 @@
+from repro.data.voice import (  # noqa: F401
+    CHAR_TO_ID, FEAT_DIM, FRAMES_PER_CHAR, VOCAB, VOCAB_SIZE, ClientShard,
+    Utterance, batchify, encode_text, make_client_shard, make_eval_set,
+    sample_command, synth_frames,
+)
+from repro.data.lm import MarkovTokens, token_batches  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.fl.client import FLClient  # noqa: F401
+from repro.fl.server import FLServer, RoundLog, make_planner  # noqa: F401

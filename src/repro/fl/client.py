@@ -1,0 +1,78 @@
+"""FL client: local training at the planned precision level.
+
+A client owns a simulated user (ground truth), a device spec, and a data
+shard. ``local_update`` runs local SGD steps with the model fake-quantized
+to the planned bits (STE gradients) and returns the parameter delta — the
+thing the OTA channel superposes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.profiling.hardware import DeviceSpec
+from repro.core.profiling.users import UserTruth
+from repro.data.voice import ClientShard, batchify
+from repro.launch.steps import make_quantized_train_step
+from repro.models.registry import Model
+from repro.optim import sgd
+
+Pytree = Any
+
+
+# process-wide compiled-step cache: all clients at the same (arch, bits,
+# lr) share one XLA executable — compile once, reuse across the federation.
+_STEP_CACHE: Dict[Tuple[str, int, float], Tuple[Callable, Any]] = {}
+
+
+@dataclasses.dataclass
+class FLClient:
+    user: UserTruth
+    spec: DeviceSpec
+    shard: ClientShard
+    model: Model
+
+    def _step_fn(self, bits: int, lr: float,
+                 fedprox_mu: float = 0.0) -> Tuple[Callable, Any]:
+        key = (self.model.cfg.name, bits, lr, fedprox_mu)
+        if key not in _STEP_CACHE:
+            opt = sgd(lr)
+            step = make_quantized_train_step(self.model, opt, bits,
+                                             fedprox_mu=fedprox_mu)
+            _STEP_CACHE[key] = (jax.jit(step), opt)
+        return _STEP_CACHE[key]
+
+    def local_update(
+        self, global_params: Pytree, bits: int, *,
+        local_steps: int = 4, local_batch: int = 8, lr: float = 5e-4,
+        seed: int = 0, max_frames: int = 320, max_labels: int = 40,
+        fedprox_mu: float = 0.0,
+    ) -> Tuple[Pytree, Dict[str, float]]:
+        """Run local steps; return (delta, metrics)."""
+        jitted, opt = self._step_fn(bits, lr, fedprox_mu)
+        state = {"params": global_params, "opt": opt.init(global_params),
+                 "step": jnp.zeros((), jnp.int32)}
+        if fedprox_mu > 0.0:
+            state["anchor"] = global_params
+        rng = np.random.RandomState(seed * 1009 + self.user.user_id)
+        losses = []
+        utts = self.shard.utterances
+        for s in range(local_steps):
+            idx = rng.randint(0, len(utts), size=min(local_batch, len(utts)))
+            batch = batchify([utts[i] for i in idx],
+                             max_frames=max_frames, max_labels=max_labels)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            state, metrics = jitted(state, batch)
+            losses.append(float(metrics["loss"]))
+        delta = jax.tree.map(
+            lambda new, old: (new.astype(jnp.float32)
+                              - old.astype(jnp.float32)),
+            state["params"], global_params)
+        return delta, {"loss_first": losses[0], "loss_last": losses[-1],
+                       "n_samples": len(utts)}

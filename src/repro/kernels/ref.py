@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+The quantization semantics are shared with ``repro.core.quant`` — these
+re-exports *are* the reference the kernels are tested against.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import qrange
+
+
+def fake_quant_ref(x: jnp.ndarray, scale: jnp.ndarray, bits: int,
+                   noise: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Fake-quantize with a precomputed per-tensor scale.
+
+    noise: optional uniform [0,1) array (stochastic rounding); None = RTN.
+    """
+    qmax = float(qrange(bits))
+    scaled = x.astype(jnp.float32) / scale
+    if noise is None:
+        q = jnp.round(scaled)
+    else:
+        floor = jnp.floor(scaled)
+        q = floor + (noise < (scaled - floor)).astype(jnp.float32)
+    q = jnp.clip(q, -qmax, qmax)
+    return q * scale
+
+
+def ota_aggregate_ref(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
+                      noise_std: jnp.ndarray) -> jnp.ndarray:
+    """Superpose K client streams: sum_k w_k x_k + noise_std * noise.
+
+    x: (K, M) f32; w: (K,) f32; noise: (M,) f32.
+    """
+    return jnp.einsum("k,km->m", w.astype(jnp.float32),
+                      x.astype(jnp.float32)) + noise_std * noise
+
+
+def qmatmul_ref(x: jnp.ndarray, w_q: jnp.ndarray,
+                scale: jnp.ndarray) -> jnp.ndarray:
+    """x (M, K) f32/bf16 @ dequant(w_q (K, N) int8, scale (N,)) -> (M, N) f32."""
+    w = w_q.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]
+    return x.astype(jnp.float32) @ w
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True) -> jnp.ndarray:
+    """Naive softmax attention. q: (BH, Sq, D); k/v: (BH, Sk, D)."""
+    D = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * D ** -0.5
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

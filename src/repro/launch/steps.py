@@ -1,0 +1,110 @@
+"""jit-able train / prefill / decode steps over the model zoo.
+
+``make_train_step`` builds the canonical FSDP+TP training step; the FL
+simulator reuses the same step per client at its planned precision via
+``quantized_train_step`` (weights fake-quantized in the forward pass —
+the client "operates at" its precision level).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import quant
+from repro.models.registry import Model
+from repro.optim import Optimizer, clip_by_global_norm
+
+Pytree = Any
+
+
+def init_train_state(model: Model, opt: Optimizer, key) -> Dict[str, Any]:
+    params = model.init(key)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_shapes(model: Model, opt: Optimizer) -> Dict[str, Any]:
+    """abstract train state (no allocation) for AOT lowering."""
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    opt_state = jax.eval_shape(opt.init, params)
+    return {"params": params, "opt": opt_state,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def make_train_step(model: Model, opt: Optimizer, *,
+                    clip_norm: float = 1.0) -> Callable:
+    def train_step(state: Dict[str, Any], batch: Dict[str, jnp.ndarray]):
+        def loss_fn(params):
+            return model.loss(params, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, state["opt"], state["params"],
+                                        state["step"])
+        params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            state["params"], updates)
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_quantized_train_step(model: Model, opt: Optimizer, bits: int, *,
+                              clip_norm: float = 1.0,
+                              fedprox_mu: float = 0.0) -> Callable:
+    """Client-side local step at precision ``bits``: the forward runs on
+    fake-quantized weights (straight-through gradients). With
+    ``fedprox_mu`` > 0 a proximal pull toward the round's global weights
+    (carried in ``state["anchor"]``) is added to the gradients (FedProx —
+    stabilises heterogeneous local training)."""
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            qparams = jax.tree.map(
+                lambda p: quant.ste_fake_quant(p, bits)
+                if p.ndim >= 2 else p, params)
+            return model.loss(qparams, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        if fedprox_mu > 0.0 and "anchor" in state:
+            grads = jax.tree.map(
+                lambda g, p, a: g + fedprox_mu * (
+                    p.astype(jnp.float32) - a.astype(jnp.float32)
+                ).astype(g.dtype),
+                grads, state["params"], state["anchor"])
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, state["opt"], state["params"],
+                                        state["step"])
+        params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            state["params"], updates)
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        if "anchor" in state:  # FedProx anchor rides along unchanged
+            new_state["anchor"] = state["anchor"]
+        return new_state, dict(metrics, loss=loss, grad_norm=gnorm)
+
+    return train_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, *, window: int = 0) -> Callable:
+    def decode_step(params, cache, batch):
+        return model.decode(params, cache, batch, window=window)
+
+    return decode_step

@@ -1,0 +1,89 @@
+"""Generic training driver for the architecture pool.
+
+Single-host CPU usage (reduced configs, real steps):
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+      --reduced --steps 50 --batch 8 --seq 128
+
+Production usage (TPU pod; this container can only dry-run it):
+  python -m repro.launch.train --arch qwen3-8b --mesh 16x16 ...
+
+The FL voice-assistant experiment (the paper's §IV) has its own driver:
+``examples/train_fl_voice.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.configs.base import get_arch
+from repro.data.lm import token_batches
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models.registry import build_model
+from repro.optim import adamw, linear_warmup_cosine
+from repro.util import count_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke) variant on CPU")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    opt = adamw(linear_warmup_cosine(args.lr, args.warmup, args.steps))
+
+    state = init_train_state(model, opt, jax.random.key(args.seed))
+    print(f"arch={cfg.name} params={count_params(state['params']):,}")
+
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    data = token_batches(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if mgr is not None:
+        restored, meta = mgr.restore_latest()
+        if restored is not None:
+            state = restored
+            print(f"restored step {meta['step']}")
+
+    t0 = time.time()
+    start = int(state["step"])
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (args.batch, 8, cfg.frontend_dim), jnp.float32)
+        if cfg.family == "audio":
+            batch["frames"] = jnp.asarray(np.random.RandomState(i).randn(
+                args.batch, cfg.encoder_seq, cfg.frontend_dim), jnp.float32)
+        state, metrics = step_fn(state, batch)
+        if (i + 1) % args.log_every == 0:
+            dt = (time.time() - t0) / max(i + 1 - start, 1)
+            print(f"step {i+1:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({dt*1000:.0f} ms/step)")
+        if mgr is not None and (i + 1) % args.ckpt_every == 0:
+            mgr.save(i + 1, state)
+    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""DeepSpeech2-style ASR model (the paper's FL experiment model, §IV-A).
+
+conv-over-time frontend (2 strided depth layers) -> bidirectional GRU stack
+-> framewise projection -> CTC loss. Sized for 100-client CPU simulation.
+The synthetic "mel" features come from repro.data.voice.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, layer_norm
+from repro.util import dtype_of
+
+Params = Dict[str, Any]
+
+BLANK = 0  # CTC blank id (vocab id 0 reserved)
+
+
+# ---------------------------------------------------------------------------
+# GRU
+# ---------------------------------------------------------------------------
+
+
+def init_gru(key, d_in: int, d_hidden: int, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "w_x": dense_init(ks[0], (d_in, 3 * d_hidden), dtype),
+        "w_h": dense_init(ks[1], (d_hidden, 3 * d_hidden), dtype),
+        "b": jnp.zeros((3 * d_hidden,), dtype),
+    }
+
+
+def gru_scan(p: Params, x: jnp.ndarray, reverse: bool = False) -> jnp.ndarray:
+    """x: (B, T, d_in) -> (B, T, d_hidden)."""
+    B, T, _ = x.shape
+    H = p["w_h"].shape[0]
+    xz = x @ p["w_x"] + p["b"]  # precompute input projections (B, T, 3H)
+
+    def step(h, xz_t):
+        rzn_h = h @ p["w_h"]
+        r = jax.nn.sigmoid(xz_t[..., :H] + rzn_h[..., :H])
+        z = jax.nn.sigmoid(xz_t[..., H : 2 * H] + rzn_h[..., H : 2 * H])
+        n = jnp.tanh(xz_t[..., 2 * H :] + r * rzn_h[..., 2 * H :])
+        h_new = (1 - z) * n + z * h
+        return h_new, h_new
+
+    h0 = jnp.zeros((B, H), x.dtype)
+    _, hs = jax.lax.scan(step, h0, xz.swapaxes(0, 1), reverse=reverse)
+    return hs.swapaxes(0, 1)
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def init_ds2(key, cfg: ArchConfig) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    F, H, V = cfg.frontend_dim, cfg.d_model, cfg.vocab_size
+    ks = jax.random.split(key, 4 + 2 * cfg.n_layers)
+    p: Params = {
+        "conv1_w": dense_init(ks[0], (11, F, H), dtype),   # (taps, in, out)
+        "conv1_b": jnp.zeros((H,), dtype),
+        "conv2_w": dense_init(ks[1], (11, H, H), dtype),
+        "conv2_b": jnp.zeros((H,), dtype),
+        "ln1_w": jnp.ones((H,), dtype), "ln1_b": jnp.zeros((H,), dtype),
+        "ln2_w": jnp.ones((H,), dtype), "ln2_b": jnp.zeros((H,), dtype),
+        "out_w": dense_init(ks[2], (2 * H, V), dtype),
+        "out_b": jnp.zeros((V,), dtype),
+        "gru": [],
+    }
+    grus = []
+    d_in = H
+    for i in range(cfg.n_layers):
+        grus.append({
+            "fwd": init_gru(ks[4 + 2 * i], d_in, H, dtype),
+            "bwd": init_gru(ks[5 + 2 * i], d_in, H, dtype),
+            "ln_w": jnp.ones((2 * H,), dtype), "ln_b": jnp.zeros((2 * H,), dtype),
+        })
+        d_in = 2 * H
+    p["gru"] = grus
+    return p
+
+
+def _conv_time(x, w, b, stride: int):
+    """1-D conv over time. x: (B, T, Cin); w: (K, Cin, Cout)."""
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding="SAME",
+        dimension_numbers=("NTC", "TIO", "NTC"),
+    )
+    return out + b
+
+
+def ds2_logits(params: Params, frames: jnp.ndarray, cfg: ArchConfig):
+    """frames: (B, T, F) -> log-probs (B, T//4, V)."""
+    x = frames.astype(dtype_of(cfg.compute_dtype))
+    x = jax.nn.relu(layer_norm(_conv_time(x, params["conv1_w"], params["conv1_b"], 2),
+                               params["ln1_w"], params["ln1_b"]))
+    x = jax.nn.relu(layer_norm(_conv_time(x, params["conv2_w"], params["conv2_b"], 2),
+                               params["ln2_w"], params["ln2_b"]))
+    for g in params["gru"]:
+        fwd = gru_scan(g["fwd"], x)
+        bwd = gru_scan(g["bwd"], x, reverse=True)
+        x = layer_norm(jnp.concatenate([fwd, bwd], axis=-1), g["ln_w"], g["ln_b"])
+    logits = x @ params["out_w"] + params["out_b"]
+    return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# CTC loss (log-space forward algorithm)
+# ---------------------------------------------------------------------------
+
+
+def ctc_loss(
+    log_probs: jnp.ndarray,  # (B, T, V) log-softmaxed
+    labels: jnp.ndarray,  # (B, L) int32, 0 = padding (blank id is also 0)
+    input_lengths: jnp.ndarray,  # (B,)
+    label_lengths: jnp.ndarray,  # (B,)
+) -> jnp.ndarray:
+    """Mean negative log-likelihood over the batch."""
+    B, T, V = log_probs.shape
+    L = labels.shape[1]
+    S = 2 * L + 1
+    NEG = -1e30
+
+    # extended label sequence: blank, l1, blank, l2, ..., blank
+    ext = jnp.zeros((B, S), jnp.int32)
+    ext = ext.at[:, 1::2].set(labels)
+    # allow skip from s-2 when ext[s] != blank and ext[s] != ext[s-2]
+    can_skip = jnp.zeros((B, S), bool)
+    can_skip = can_skip.at[:, 2:].set(
+        (ext[:, 2:] != BLANK) & (ext[:, 2:] != ext[:, :-2]))
+
+    def get_lp(t):  # (B, S) label log-probs at frame t
+        lp_t = log_probs[:, t]  # (B, V)
+        return jnp.take_along_axis(lp_t, ext, axis=1)
+
+    alpha0 = jnp.full((B, S), NEG)
+    alpha0 = alpha0.at[:, 0].set(log_probs[:, 0, BLANK])
+    alpha0 = alpha0.at[:, 1].set(
+        jnp.where(label_lengths > 0, get_lp(0)[:, 1], NEG))
+
+    def step(alpha, t):
+        stay = alpha
+        prev1 = jnp.concatenate([jnp.full((B, 1), NEG), alpha[:, :-1]], axis=1)
+        prev2 = jnp.concatenate([jnp.full((B, 2), NEG), alpha[:, :-2]], axis=1)
+        prev2 = jnp.where(can_skip, prev2, NEG)
+        merged = jnp.logaddexp(jnp.logaddexp(stay, prev1), prev2)
+        alpha_new = merged + get_lp(t)
+        # frames beyond input length keep alpha frozen
+        alpha_new = jnp.where((t < input_lengths)[:, None], alpha_new, alpha)
+        return alpha_new, None
+
+    alpha, _ = jax.lax.scan(step, alpha0, jnp.arange(1, T))
+
+    # final: sum of last blank and last label positions
+    last = 2 * label_lengths  # index of final blank
+    idx_b = jnp.arange(B)
+    ll = jnp.logaddexp(
+        alpha[idx_b, last],
+        jnp.where(label_lengths > 0, alpha[idx_b, jnp.maximum(last - 1, 0)], NEG),
+    )
+    return -jnp.mean(ll / jnp.maximum(label_lengths.astype(jnp.float32), 1.0))
+
+
+def ds2_loss(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig):
+    """batch: frames (B,T,F), labels (B,L), frame_len (B,), label_len (B,)."""
+    lp = ds2_logits(params, batch["frames"], cfg)
+    in_len = jnp.minimum(batch["frame_len"] // 4, lp.shape[1])
+    loss = ctc_loss(lp, batch["labels"], in_len, batch["label_len"])
+    return loss, {"ce": loss, "aux": jnp.zeros(())}
+
+
+def ds2_greedy_decode(params: Params, frames, cfg: ArchConfig) -> jnp.ndarray:
+    """Greedy CTC decode -> (B, T') token ids with blanks/repeats collapsed
+    marked as 0."""
+    lp = ds2_logits(params, frames, cfg)
+    ids = jnp.argmax(lp, axis=-1)  # (B, T')
+    prev = jnp.concatenate([jnp.full_like(ids[:, :1], -1), ids[:, :-1]], axis=1)
+    keep = (ids != BLANK) & (ids != prev)
+    return jnp.where(keep, ids, 0)

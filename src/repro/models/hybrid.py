@@ -1,0 +1,241 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block.
+
+The Zamba design (arXiv:2411.15242) interleaves a weight-shared attention
+block every ``attn_every`` mamba layers (the shared block reads the
+concatenation of the current hidden state and the original embedding).
+We implement the two-level structure as nested scans:
+
+    outer scan over segments (n_layers // attn_every of them)
+      inner scan over that segment's mamba2 layers (stacked params)
+      then the shared attention block (same weights each application)
+
+which keeps HLO compact for the 54-layer production config.
+
+Simplifications vs the released checkpoints (noted per DESIGN.md §9):
+single shared block (Zamba2 alternates two) and no per-invocation LoRA.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.util import constrain, dtype_of
+
+Params = Dict[str, Any]
+
+
+def _segments(cfg: ArchConfig) -> Tuple[int, int]:
+    every = cfg.attn_every or cfg.n_layers
+    n_seg = max(1, cfg.n_layers // every)
+    return n_seg, every
+
+
+def init_hybrid(key, cfg: ArchConfig) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    n_seg, every = _segments(cfg)
+    k_embed, k_m, k_a, k_head = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_m, n_seg * every)
+
+    def one(k):
+        return {"norm": jnp.ones((cfg.d_model,), dtype),
+                "mamba": S.init_mamba2(k, cfg, dtype)}
+
+    stacked = jax.vmap(one)(layer_keys)
+    # reshape leading axis to (n_seg, every)
+    stacked = jax.tree.map(
+        lambda a: a.reshape((n_seg, every) + a.shape[1:]), stacked
+    )
+    shared = {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(jax.random.fold_in(k_a, 0), cfg, dtype),
+        "mlp": L.init_mlp(jax.random.fold_in(k_a, 1), cfg.d_model, cfg.d_ff, dtype),
+        # projection for the concat([hidden, embedding]) input of the shared block
+        "in_proj": L.dense_init(jax.random.fold_in(k_a, 2),
+                                (2 * cfg.d_model, cfg.d_model), dtype),
+    }
+    return {
+        "embed": L.embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dtype),
+        "segments": stacked,
+        "shared": shared,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": L.dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def _shared_attn(shared: Params, x, x0, cfg: ArchConfig, positions,
+                 differentiable: bool = True):
+    """The weight-shared attention block. x0 = original embeddings."""
+    inp = jnp.concatenate([x, x0], axis=-1) @ shared["in_proj"]
+    h, kv = L.attention_block(
+        shared["attn"], L.rms_norm(inp, shared["attn_norm"], cfg.norm_eps),
+        cfg, positions, causal=True, differentiable=differentiable,
+    )
+    x = x + h
+    x = x + L.mlp_block(shared["mlp"], L.rms_norm(x, shared["mlp_norm"], cfg.norm_eps))
+    return x, kv
+
+
+def _forward(params: Params, tokens, cfg: ArchConfig, collect_state: bool,
+             differentiable: bool = True):
+    x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    x = constrain(x, P(("pod", "data"), None, None))
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x0 = x
+
+    def inner(xc, layer_p):
+        xn = L.rms_norm(xc, layer_p["norm"], cfg.norm_eps)
+        out, state = S.mamba2_block(layer_p["mamba"], xn, cfg,
+                                    return_state=collect_state)
+        return xc + out, state
+
+    inner_fn = jax.checkpoint(inner) if cfg.remat and not collect_state else inner
+
+    n_seg, every = _segments(cfg)
+
+    def outer(xc, seg_p):
+        if cfg.unroll_layers:
+            states_l = []
+            for i in range(every):
+                layer_p = jax.tree.map(lambda a: a[i], seg_p)
+                xc, st = inner_fn(xc, layer_p)
+                states_l.append(st)
+            states = (jax.tree.map(lambda *xs: jnp.stack(xs), *states_l)
+                      if collect_state else None)
+        else:
+            xc, states = jax.lax.scan(inner_fn, xc, seg_p)
+        xc, kv = _shared_attn(params["shared"], xc, x0, cfg, positions,
+                              differentiable=differentiable)
+        emit = (states, kv) if collect_state else None
+        return xc, emit
+
+    if cfg.unroll_layers:
+        emits = []
+        for s in range(n_seg):
+            seg_p = jax.tree.map(lambda a: a[s], params["segments"])
+            x, em = outer(x, seg_p)
+            emits.append(em)
+        collected = (jax.tree.map(lambda *xs: jnp.stack(xs), *emits)
+                     if collect_state else None)
+    else:
+        x, collected = jax.lax.scan(outer, x, params["segments"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, collected
+
+
+def hybrid_prefill(params: Params, batch, cfg: ArchConfig):
+    """Full forward collecting SSM final states + shared-attn K/V."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x, collected = _forward(params, tokens, cfg, collect_state=True,
+                            differentiable=False)
+    states, kvs = collected
+    logits = (x[:, -1] @ params["lm_head"]).astype(jnp.float32)
+    k_stack, v_stack = kvs  # (n_seg, B, T, KV, Dh)
+    n_seg = k_stack.shape[0]
+    cache = {
+        "ssm_h": states["h"],
+        "ssm_conv": states["conv"],
+        "k": k_stack,
+        "v": v_stack,
+        "pos": jnp.broadcast_to(
+            jnp.arange(T, dtype=jnp.int32)[None, None], (n_seg, B, T)),
+    }
+    return logits, cache
+
+
+def hybrid_loss(params: Params, batch, cfg: ArchConfig):
+    x, _ = _forward(params, batch["tokens"], cfg, collect_state=False)
+    h = x[:, :-1]
+    targets = batch["tokens"][:, 1:]
+    logits = (h @ params["lm_head"]).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    return loss, {"ce": loss, "aux": jnp.zeros(())}
+
+
+def init_hybrid_cache(cfg: ArchConfig, B: int, cache_len: int) -> Params:
+    dt = dtype_of(cfg.param_dtype)
+    n_seg, every = _segments(cfg)
+    di = cfg.resolved_d_inner()
+    H = cfg.resolved_ssm_heads()
+    N = cfg.ssm_state
+    Pd = di // H
+    K = cfg.ssm_conv
+    conv_dim = di + 2 * N
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim()
+    return {
+        "ssm_h": jnp.zeros((n_seg, every, B, H, Pd, N), jnp.float32),
+        "ssm_conv": jnp.zeros((n_seg, every, B, K - 1, conv_dim), dt),
+        "k": jnp.zeros((n_seg, B, cache_len, KV, Dh), dt),
+        "v": jnp.zeros((n_seg, B, cache_len, KV, Dh), dt),
+        "pos": jnp.full((n_seg, B, cache_len), -1, jnp.int32),
+    }
+
+
+def hybrid_decode_step(params: Params, cache, batch, cfg: ArchConfig,
+                       *, window: int = 0):
+    x = params["embed"][batch["tokens"]].astype(dtype_of(cfg.compute_dtype))
+    pos = batch["pos"]
+    x0 = x[:, 0]
+
+    def inner(xc, scanned):
+        layer_p, h_state, conv_state = scanned
+        xn = L.rms_norm(xc, layer_p["norm"], cfg.norm_eps)
+        out, new_state = S.mamba2_decode(
+            layer_p["mamba"], xn, cfg, {"h": h_state, "conv": conv_state}
+        )
+        return xc + out, (new_state["h"], new_state["conv"])
+
+    def outer(xc, scanned):
+        seg_p, seg_h, seg_conv, k_c, v_c, pos_c = scanned
+        if cfg.unroll_layers:
+            _, every = _segments(cfg)
+            ems = []
+            for i in range(every):
+                sl = jax.tree.map(lambda a: a[i], (seg_p, seg_h, seg_conv))
+                xc, em = inner(xc, sl)
+                ems.append(em)
+            new_h, new_conv = jax.tree.map(lambda *xs: jnp.stack(xs), *ems)
+        else:
+            xc, (new_h, new_conv) = jax.lax.scan(inner, xc, (seg_p, seg_h, seg_conv))
+        inp = jnp.concatenate([xc, x0[:, None]], axis=-1) @ params["shared"]["in_proj"]
+        h, new_kv = L.attention_decode_block(
+            params["shared"]["attn"],
+            L.rms_norm(inp, params["shared"]["attn_norm"], cfg.norm_eps),
+            cfg, pos, {"k": k_c, "v": v_c, "pos": pos_c}, window=window,
+        )
+        xc = xc + h
+        xc = xc + L.mlp_block(
+            params["shared"]["mlp"],
+            L.rms_norm(xc, params["shared"]["mlp_norm"], cfg.norm_eps),
+        )
+        return xc, (new_h, new_conv, new_kv["k"], new_kv["v"], new_kv["pos"])
+
+    scanned_args = (params["segments"], cache["ssm_h"], cache["ssm_conv"],
+                    cache["k"], cache["v"], cache["pos"])
+    if cfg.unroll_layers:
+        n_seg, _ = _segments(cfg)
+        emits = []
+        for s in range(n_seg):
+            sl = jax.tree.map(lambda a: a[s], scanned_args)
+            x, em = outer(x, sl)
+            emits.append(em)
+        new_h, new_conv, k_n, v_n, pos_n = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *emits)
+    else:
+        x, (new_h, new_conv, k_n, v_n, pos_n) = jax.lax.scan(
+            outer, x, scanned_args)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["lm_head"]).astype(jnp.float32)
+    new_cache = {"ssm_h": new_h, "ssm_conv": new_conv, "k": k_n, "v": v_n,
+                 "pos": pos_n}
+    return logits, new_cache

@@ -1,0 +1,160 @@
+"""Uniform model API over the zoo.
+
+``build_model(cfg)`` returns a ``Model`` with:
+- ``init(key)``                       -> params
+- ``loss(params, batch)``             -> (scalar, metrics)   [train]
+- ``prefill(params, batch)``          -> (logits, cache)     [attention archs]
+- ``init_cache(B, cache_len)``        -> cache pytree
+- ``decode(params, cache, batch)``    -> (logits, cache)
+- ``input_spec(shape)``               -> dict of ShapeDtypeStructs (launch)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import deepspeech2 as DS2
+from repro.models import hybrid as HY
+from repro.models import transformer as TF
+from repro.models import whisper as WH
+from repro.util import dtype_of
+
+# decode beyond this cache length switches to the sliding-window ring buffer
+FULL_CACHE_MAX = 32_768
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    init_cache: Callable
+    decode: Callable
+    prefill: Optional[Callable] = None
+
+    def cache_len_for(self, seq_len: int) -> int:
+        if self.cfg.family in ("ssm",):
+            return 0
+        if seq_len > FULL_CACHE_MAX:
+            return self.cfg.window
+        return seq_len
+
+    def decode_window_for(self, seq_len: int) -> int:
+        if seq_len > FULL_CACHE_MAX:
+            return self.cfg.window
+        return 0
+
+    def grow_cache(self, cache, new_len: int):
+        """Pad attention K/V/pos slots (e.g. after prefill, before decode).
+
+        SSM caches are fixed-size state: returned unchanged.
+        """
+        import jax.numpy as jnp
+
+        def fit(name, cur):
+            if name in ("k", "v"):
+                axis = cur.ndim - 3
+            elif name == "pos":
+                axis = cur.ndim - 1
+            else:
+                return cur
+            pad_n = new_len - cur.shape[axis]
+            if pad_n <= 0:
+                return cur
+            pad = [(0, 0)] * cur.ndim
+            pad[axis] = (0, pad_n)
+            return jnp.pad(cur, pad, constant_values=-1 if name == "pos" else 0)
+
+        return {k: fit(k, v) for k, v in cache.items()}
+
+    def input_spec(self, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+        cfg = self.cfg
+        B = shape.global_batch
+        S = shape.seq_len
+        tok = jnp.int32
+        if shape.kind == "train":
+            if cfg.family == "audio":
+                # stub frontend delivers embedded frames; tokens are targets
+                return {
+                    "frames": jax.ShapeDtypeStruct(
+                        (B, cfg.encoder_seq, cfg.frontend_dim), jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((B, S), tok),
+                }
+            if cfg.family == "ds2":
+                return {
+                    "frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), jnp.float32),
+                    "labels": jax.ShapeDtypeStruct((B, S // 8), tok),
+                    "frame_len": jax.ShapeDtypeStruct((B,), tok),
+                    "label_len": jax.ShapeDtypeStruct((B,), tok),
+                }
+            spec = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+            if cfg.family == "vlm":
+                # stub vision frontend: 256 patch embeddings prepended
+                spec["patches"] = jax.ShapeDtypeStruct(
+                    (B, 256, cfg.frontend_dim), jnp.bfloat16)
+                spec["tokens"] = jax.ShapeDtypeStruct((B, S - 256), tok)
+            return spec
+        if shape.kind == "prefill":
+            if cfg.family == "audio":
+                return {
+                    "frames": jax.ShapeDtypeStruct(
+                        (B, cfg.encoder_seq, cfg.frontend_dim), jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((B, S), tok),
+                }
+            spec = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+            if cfg.family == "vlm":
+                spec["patches"] = jax.ShapeDtypeStruct(
+                    (B, 256, cfg.frontend_dim), jnp.bfloat16)
+                spec["tokens"] = jax.ShapeDtypeStruct((B, S - 256), tok)
+            return spec
+        # decode: one new token against a cache of length seq_len
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), tok),
+            "pos": jax.ShapeDtypeStruct((B,), tok),
+        }
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "ssm"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: TF.init_lm(key, cfg),
+            loss=lambda p, b: TF.lm_loss(p, b, cfg),
+            init_cache=lambda B, n: TF.init_decode_cache(cfg, B, n),
+            decode=lambda p, c, b, window=0: TF.decode_step(p, c, b, cfg, window=window),
+            prefill=lambda p, b: TF.prefill(p, b, cfg),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: HY.init_hybrid(key, cfg),
+            loss=lambda p, b: HY.hybrid_loss(p, b, cfg),
+            init_cache=lambda B, n: HY.init_hybrid_cache(cfg, B, n),
+            decode=lambda p, c, b, window=0: HY.hybrid_decode_step(p, c, b, cfg, window=window),
+            prefill=lambda p, b: HY.hybrid_prefill(p, b, cfg),
+        )
+    if fam == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda key: WH.init_whisper(key, cfg),
+            loss=lambda p, b: WH.whisper_loss(p, b, cfg),
+            init_cache=lambda B, n: WH.init_whisper_cache(cfg, B, n),
+            decode=lambda p, c, b, window=0: WH.whisper_decode_step(p, c, b, cfg, window=window),
+            prefill=lambda p, b: WH.whisper_prefill(p, b, cfg),
+        )
+    if fam == "ds2":
+        return Model(
+            cfg=cfg,
+            init=lambda key: DS2.init_ds2(key, cfg),
+            loss=lambda p, b: DS2.ds2_loss(p, b, cfg),
+            init_cache=lambda B, n: {},
+            decode=lambda p, c, b, window=0: (_ for _ in ()).throw(
+                NotImplementedError("ds2 is CTC/non-autoregressive")),
+        )
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,360 @@
+"""State-space model blocks: Mamba-1 (falcon-mamba) and Mamba-2/SSD (zamba2).
+
+TPU adaptation (DESIGN.md §4): the CUDA selective-scan kernel does a
+sequential recurrence parallelised over channels. On TPU we instead use
+
+- **Mamba-1**: a two-level chunked scan — intra-chunk sequential over
+  chunk length L (all chunks advance in lockstep, vectorised over the
+  chunk axis) + inter-chunk scan over T/L chunk boundaries, then a second
+  intra-chunk pass seeded with the correct boundary states. Sequential
+  depth 2L + T/L instead of T; numerically identical to the reference
+  recurrence (no inverse-decay terms, so no overflow risk).
+- **Mamba-2 (SSD)**: the chunked matmul formulation — intra-chunk
+  attention-like matmuls (MXU-friendly) + scalar-per-head inter-chunk
+  recurrence.
+
+Both expose a single-step ``*_decode`` path carrying (ssm_state, conv_state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.util import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv1d
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, T, C); w: (K, C) depthwise taps; b: (C,). Causal (left pad)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is tiny (4); unrolled shifts beat a conv op here
+        out = out + xp[:, i : i + x.shape[1]] * w[i]
+    return out + b
+
+
+def conv1d_decode(
+    x_t: jnp.ndarray, conv_state: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-step depthwise conv. x_t: (B, C); conv_state: (B, K-1, C)."""
+    full = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", full, w) + b
+    return out, full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective scan (diagonal A, per-channel dt)
+# ---------------------------------------------------------------------------
+
+
+def _mamba1_chunked_scan(
+    dt: jnp.ndarray,  # (B, T, d)  softplus'd step sizes
+    A: jnp.ndarray,  # (d, N)     negative
+    Bm: jnp.ndarray,  # (B, T, N)
+    Cm: jnp.ndarray,  # (B, T, N)
+    x: jnp.ndarray,  # (B, T, d)
+    h0: jnp.ndarray,  # (B, d, N) initial state
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,T,d), h_final (B,d,N)). fp32 internally."""
+    B_, T, d = x.shape
+    N = A.shape[1]
+    L = min(chunk, T)
+    n_chunks = -(-T // L)
+    pad = n_chunks * L - T
+
+    def pad_t(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2)) if pad else a
+
+    dt_c = pad_t(dt).reshape(B_, n_chunks, L, d).astype(jnp.float32)
+    B_c = pad_t(Bm).reshape(B_, n_chunks, L, N).astype(jnp.float32)
+    C_c = pad_t(Cm).reshape(B_, n_chunks, L, N).astype(jnp.float32)
+    x_c = pad_t(x).reshape(B_, n_chunks, L, d).astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    # scan over intra-chunk position; all chunks in lockstep.
+    def intra(h, inputs, emit: bool):
+        dt_t, B_t, x_t = inputs[:3]  # (B, NC, d), (B, NC, N), (B, NC, d)
+        a_t = jnp.exp(dt_t[..., None] * Af)  # (B, NC, d, N); A<0 => a in (0,1]
+        b_t = (dt_t * x_t)[..., None] * B_t[:, :, None, :]  # (B, NC, d, N)
+        h = a_t * h + b_t
+        if emit:
+            C_t = inputs[3]  # (B, NC, N)
+            y_t = jnp.einsum("bcdn,bcn->bcd", h, C_t)
+            return h, y_t
+        return h, a_t  # emit per-step decay for chunk-decay product
+
+    # ---- pass 1: chunk-local final states (h0 = 0) + chunk decay products
+    def p1_step(carry, t):
+        h, adec = carry
+        inp = (dt_c[:, :, t], B_c[:, :, t], x_c[:, :, t])
+        h, a_t = intra(h, inp, emit=False)
+        return (h, adec * a_t), None
+
+    h_zero = jnp.zeros((B_, n_chunks, d, N), jnp.float32)
+    (h_local, a_chunk), _ = jax.lax.scan(
+        p1_step, (h_zero, jnp.ones_like(h_zero)), jnp.arange(L)
+    )
+
+    # ---- pass 2: inter-chunk recurrence over chunk boundaries
+    def p2_step(H, c):
+        H_next = a_chunk[:, c] * H + h_local[:, c]
+        return H_next, H  # emit state *entering* chunk c
+
+    h_final, H_in = jax.lax.scan(p2_step, h0.astype(jnp.float32), jnp.arange(n_chunks))
+    H_in = H_in.transpose(1, 0, 2, 3)  # (B, NC, d, N)
+
+    # ---- pass 3: recompute with correct seeds, emitting outputs
+    def p3_step(h, t):
+        inp = (dt_c[:, :, t], B_c[:, :, t], x_c[:, :, t], C_c[:, :, t])
+        h, y_t = intra(h, inp, emit=True)
+        return h, y_t
+
+    _, ys = jax.lax.scan(p3_step, H_in, jnp.arange(L))  # (L, B, NC, d)
+    y = ys.transpose(1, 2, 0, 3).reshape(B_, n_chunks * L, d)[:, :T]
+    return y, h_final
+
+
+def init_mamba1(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    di = cfg.resolved_d_inner()
+    N = cfg.ssm_state
+    R = cfg.resolved_dt_rank()
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    # S4D-real initialisation for A
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(
+        jax.random.uniform(ks[6], (di,), jnp.float32) * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": (jax.random.normal(ks[1], (K, di), jnp.float32) * (K ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, R + 2 * N), dtype),
+        "dt_proj": dense_init(ks[3], (R, di), dtype, scale=R ** -0.5),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _mamba1_inner(p: Params, xz: jnp.ndarray, cfg: ArchConfig, h0, conv_state=None):
+    """Shared pre/post processing. xz: (B, T, 2*di) from in_proj."""
+    di = cfg.resolved_d_inner()
+    N = cfg.ssm_state
+    R = cfg.resolved_dt_rank()
+    x, z = xz[..., :di], xz[..., di:]
+    x = constrain(x, P(("pod", "data"), None, "model"))
+    if conv_state is None:
+        K = p["conv_w"].shape[0]
+        # conv tail = last K-1 pre-conv inputs (left-padded if T < K-1);
+        # this is the conv state a subsequent decode step needs.
+        tail = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):] if K > 1 else x[:, :0]
+        x = causal_conv1d(x, p["conv_w"], p["conv_b"])
+        new_conv = tail
+    else:
+        xc, new_conv = conv1d_decode(x[:, 0], conv_state, p["conv_w"], p["conv_b"])
+        x = xc[:, None]
+    x = jax.nn.silu(x)
+    proj = x @ p["x_proj"]  # (B, T, R + 2N)
+    dt = jax.nn.softplus(proj[..., :R] @ p["dt_proj"] + p["dt_bias"])
+    Bm = proj[..., R : R + N]
+    Cm = proj[..., R + N :]
+    A = -jnp.exp(p["A_log"])
+    y, h_final = _mamba1_chunked_scan(dt, A, Bm, Cm, x, h0)
+    y = y + x.astype(jnp.float32) * p["D"]
+    y = y.astype(xz.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, h_final, new_conv
+
+
+def mamba1_block(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    B = x.shape[0]
+    di, N = cfg.resolved_d_inner(), cfg.ssm_state
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    out, _, _ = _mamba1_inner(p, x @ p["in_proj"], cfg, h0)
+    return out
+
+
+def mamba1_decode(
+    p: Params, x: jnp.ndarray, cfg: ArchConfig, state: Dict[str, jnp.ndarray]
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, 1, d); state = {"h": (B,di,N), "conv": (B,K-1,di)}."""
+    out, h_final, new_conv = _mamba1_inner(
+        p, x @ p["in_proj"], cfg, state["h"], conv_state=state["conv"]
+    )
+    return out, {"h": h_final, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) — scalar-per-head decay, chunked matmul form
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    di = cfg.resolved_d_inner()
+    H = cfg.resolved_ssm_heads()
+    N = cfg.ssm_state
+    K = cfg.ssm_conv
+    conv_dim = di + 2 * N  # x, B, C go through the conv
+    ks = jax.random.split(key, 8)
+    A = jnp.exp(
+        jax.random.uniform(ks[5], (H,), jnp.float32)
+        * (jnp.log(16.0) - jnp.log(1.0)) + jnp.log(1.0)
+    )
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(
+        jax.random.uniform(ks[6], (H,), jnp.float32) * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * N + H), dtype),
+        "conv_w": (jax.random.normal(ks[1], (K, conv_dim), jnp.float32) * (K ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias,
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), dtype),
+    }
+
+
+def _ssd_scan(
+    x: jnp.ndarray,  # (B, T, H, P) head inputs
+    dt: jnp.ndarray,  # (B, T, H) softplus'd
+    A: jnp.ndarray,  # (H,) negative
+    Bm: jnp.ndarray,  # (B, T, N)
+    Cm: jnp.ndarray,  # (B, T, N)
+    h0: jnp.ndarray,  # (B, H, P, N)
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD chunked algorithm. Returns (y (B,T,H,P), h_final)."""
+    B_, T, H, Pd = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, T)
+    n_chunks = -(-T // L)
+    pad = n_chunks * L - T
+
+    def pad_t(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2)) if pad else a
+
+    xf = pad_t(x).reshape(B_, n_chunks, L, H, Pd).astype(jnp.float32)
+    dtf = pad_t(dt).reshape(B_, n_chunks, L, H).astype(jnp.float32)
+    Bf = pad_t(Bm).reshape(B_, n_chunks, L, N).astype(jnp.float32)
+    Cf = pad_t(Cm).reshape(B_, n_chunks, L, N).astype(jnp.float32)
+
+    la = dtf * A  # (B, NC, L, H) log-decay per step (negative)
+    cum = jnp.cumsum(la, axis=2)  # inclusive cumulative log-decay
+
+    # intra-chunk attention-like term:
+    # M[t,s] = exp(cum[t]-cum[s]) for t>=s  (<=1, safe)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,NC,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    M = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cf, Bf)  # (B,NC,L,L)
+    xdt = xf * dtf[..., None]  # (B,NC,L,H,P)
+    y_intra = jnp.einsum("bclm,bclmh,bcmhp->bclhp", scores, M, xdt)
+
+    # chunk-final states with zero seed: S_c = sum_s exp(cum[L-1]-cum[s]) * B_s x_s dt_s
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,NC,L,H)
+    S_c = jnp.einsum("bclh,bcln,bclhp->bchpn", decay_to_end, Bf, xdt)
+
+    # inter-chunk recurrence: scalar chunk decay per head
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B, NC, H)
+
+    def step(Hc, c):
+        H_next = chunk_decay[:, c][:, :, None, None] * Hc + S_c[:, c]
+        return H_next, Hc
+
+    h_final, H_in = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(n_chunks))
+    H_in = H_in.transpose(1, 0, 2, 3, 4)  # (B, NC, H, P, N)
+
+    # contribution of entering state: y_t += C_t^T (exp(cum[t]) * H_in)
+    decay_from_start = jnp.exp(cum)  # (B,NC,L,H)
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", Cf, decay_from_start, H_in)
+
+    y = (y_intra + y_inter).reshape(B_, n_chunks * L, H, Pd)[:, :T]
+    return y, h_final
+
+
+def _mamba2_split(p: Params, zxbcdt: jnp.ndarray, cfg: ArchConfig):
+    di = cfg.resolved_d_inner()
+    N = cfg.ssm_state
+    H = cfg.resolved_ssm_heads()
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : di + di + 2 * N]
+    dt_raw = zxbcdt[..., di + di + 2 * N :]  # (B, T, H)
+    return z, xBC, dt_raw
+
+
+def mamba2_block(p: Params, x_in: jnp.ndarray, cfg: ArchConfig,
+                 return_state: bool = False):
+    """Returns (out, state|None); state = {"h", "conv"} for decode priming."""
+    B_, T, _ = x_in.shape
+    di = cfg.resolved_d_inner()
+    N = cfg.ssm_state
+    H = cfg.resolved_ssm_heads()
+    Pd = di // H
+    K = p["conv_w"].shape[0]
+    z, xBC, dt_raw = _mamba2_split(p, x_in @ p["in_proj"], cfg)
+    conv_tail = (jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):]
+                 if K > 1 else xBC[:, :0])
+    xBC = jax.nn.silu(causal_conv1d(xBC, p["conv_w"], p["conv_b"]))
+    x = xBC[..., :di].reshape(B_, T, H, Pd)
+    x = constrain(x, P(("pod", "data"), None, "model", None))
+    Bm = xBC[..., di : di + N]
+    Cm = xBC[..., di + N :]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    h0 = jnp.zeros((B_, H, Pd, N), jnp.float32)
+    y, h_final = _ssd_scan(x, dt, A, Bm, Cm, h0)
+    y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, T, di).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, {"h": h_final, "conv": conv_tail}
+    return out, None
+
+
+def mamba2_decode(
+    p: Params, x_in: jnp.ndarray, cfg: ArchConfig, state: Dict[str, jnp.ndarray]
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-step SSD recurrence. state={"h": (B,H,P,N), "conv": (B,K-1,conv_dim)}."""
+    B_ = x_in.shape[0]
+    di = cfg.resolved_d_inner()
+    N = cfg.ssm_state
+    H = cfg.resolved_ssm_heads()
+    Pd = di // H
+    z, xBC, dt_raw = _mamba2_split(p, x_in @ p["in_proj"], cfg)
+    xBC_t, new_conv = conv1d_decode(xBC[:, 0], state["conv"], p["conv_w"], p["conv_b"])
+    xBC_t = jax.nn.silu(xBC_t)
+    x = xBC_t[..., :di].reshape(B_, H, Pd)
+    Bm = xBC_t[..., di : di + N]
+    Cm = xBC_t[..., di + N :]
+    dt = jax.nn.softplus(dt_raw[:, 0] + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)  # (B, H)
+    h = state["h"].astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32) * dt[..., None], Bm.astype(jnp.float32))
+    h_new = decay[:, :, None, None] * h + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B_, 1, di).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"h": h_new, "conv": new_conv}

@@ -1,0 +1,344 @@
+"""Generic decoder-only LM covering the dense / moe / vlm / ssm families.
+
+Layers are *stacked* (every per-layer param has a leading ``n_layers`` axis)
+and applied with ``jax.lax.scan`` so 61–95-layer production configs lower to
+compact HLO. ``cfg.remat`` wraps the scanned block in ``jax.checkpoint``.
+
+Three entry points per model:
+- ``lm_loss(params, batch, cfg)``      — training loss (chunked logits).
+- ``prefill(params, batch, cfg)``      — full-sequence forward + KV cache.
+- ``decode_step(params, cache, batch, cfg)`` — one token with cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.util import constrain, dtype_of, split_like
+
+Params = Dict[str, Any]
+
+LOSS_CHUNK = 512  # sequence chunk for logit materialisation
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ArchConfig, dtype) -> Params:
+    """One layer's params (unstacked)."""
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm":
+        return {"norm": jnp.ones((cfg.d_model,), dtype),
+                "mamba": S.init_mamba1(ks[0], cfg, dtype)}
+    p: Params = {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = L.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_lm(key, cfg: ArchConfig) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    # stacked layer params: vmap the per-layer init over layer keys
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    p: Params = {
+        "embed": L.embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dtype),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype)
+    if cfg.frontend == "vision":
+        # projector from stub patch embeddings to d_model
+        p["vis_proj"] = L.dense_init(
+            jax.random.fold_in(key, 11), (cfg.frontend_dim, cfg.d_model), dtype
+        )
+    return p
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _block(p: Params, x, cfg: ArchConfig, positions, window: int,
+           differentiable: bool = True):
+    """Full-sequence layer. Returns (x, aux, (k, v)).
+
+    NOTE (§Perf iter 2, refuted): Megatron-style sequence parallelism via
+    bare sharding constraints (residual stream P(dp, "model", None) with
+    gather/scatter pairs around the TP matmuls) triggers "involuntary full
+    rematerialization" in the GSPMD partitioner wherever the seq-sharding
+    meets the flash-attention chunk reshapes — measured all-gather bytes
+    went 46 GB -> 24 TB on deepseek-67b. Reverted; a Shardy-based retry is
+    the documented follow-up.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        x = x + S.mamba1_block(p["mamba"], L.rms_norm(x, p["norm"], cfg.norm_eps), cfg)
+        return x, aux, None
+    h, kv = L.attention_block(
+        p["attn"], L.rms_norm(x, p["attn_norm"], cfg.norm_eps), cfg, positions,
+        causal=True, window=window, differentiable=differentiable,
+    )
+    x = x + h
+    hn = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    if cfg.family == "moe":
+        h2, aux = L.moe_block(p["moe"], hn, cfg)
+    else:
+        h2 = L.mlp_block(p["mlp"], hn)
+    return x + h2, aux, kv
+
+
+def _block_decode(p: Params, x, cfg: ArchConfig, pos, cache, window: int):
+    if cfg.family == "ssm":
+        h, new_state = S.mamba1_decode(
+            p["mamba"], L.rms_norm(x, p["norm"], cfg.norm_eps), cfg, cache
+        )
+        return x + h, new_state
+    h, new_cache = L.attention_decode_block(
+        p["attn"], L.rms_norm(x, p["attn_norm"], cfg.norm_eps), cfg, pos, cache,
+        window=window,
+    )
+    x = x + h
+    hn = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    if cfg.family == "moe":
+        h2, _ = L.moe_block(p["moe"], hn, cfg)
+    else:
+        h2 = L.mlp_block(p["mlp"], hn)
+    return x + h2, new_cache
+
+
+# ---------------------------------------------------------------------------
+# embeddings / positions
+# ---------------------------------------------------------------------------
+
+
+def _positions(cfg: ArchConfig, B: int, S_: int, offset=0):
+    pos = jnp.arange(S_, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B, S_))
+    if cfg.mrope:
+        # stub frontend: all three M-RoPE streams share sequential positions
+        # (real VLM would give patch rows/cols distinct h/w streams).
+        return jnp.broadcast_to(pos[:, None, :], (B, 3, S_))
+    return pos
+
+
+def _embed_inputs(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig):
+    """tokens (+ optional stub modality embeddings) -> (B, S_total, d)."""
+    x = params["embed"][batch["tokens"]]
+    if cfg.frontend == "vision" and "patches" in batch:
+        vis = batch["patches"].astype(x.dtype) @ params["vis_proj"]
+        x = jnp.concatenate([vis, x], axis=1)
+    return x.astype(dtype_of(cfg.compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _run_layers(params: Params, x, cfg: ArchConfig, positions, window: int,
+                collect_kv: bool = False, differentiable: bool = True):
+    """Scan the stacked layers. Returns (x, aux_total, kv_stack|None)."""
+
+    def body(carry, layer_p):
+        xc, aux_acc = carry
+        xo, aux, kv = _block(layer_p, xc, cfg, positions, window,
+                             differentiable)
+        out = kv if collect_kv else None
+        return (xo, aux_acc + aux), out
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    if cfg.unroll_layers:  # cost-calibration mode: true per-layer HLO
+        carry, kv_list = carry0, []
+        for i in range(cfg.n_layers):
+            layer_p = jax.tree.map(lambda a: a[i], params["layers"])
+            carry, out = fn(carry, layer_p)
+            kv_list.append(out)
+        x, aux = carry
+        kvs = (jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+               if collect_kv else None)
+        return x, aux, kvs
+    (x, aux), kvs = jax.lax.scan(fn, carry0, params["layers"])
+    return x, aux, kvs
+
+
+def lm_logits_and_aux(params: Params, batch, cfg: ArchConfig):
+    x = _embed_inputs(params, batch, cfg)
+    B, S_total = x.shape[0], x.shape[1]
+    positions = _positions(cfg, B, S_total)
+    x = constrain(x, P(("pod", "data"), None, None))
+    x, aux, _ = _run_layers(params, x, cfg, positions, window=0)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x, head, aux
+
+
+def lm_loss(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig):
+    """Next-token CE on the token segment; logits materialised per chunk."""
+    x, head, aux = lm_logits_and_aux(params, batch, cfg)
+    B = x.shape[0]
+    S_tok = batch["tokens"].shape[1]
+    x_tok = x[:, -S_tok:]  # strip modality prefix if present
+    # shift: predict tokens[t+1] from position t
+    h = x_tok[:, :-1]
+    targets = batch.get("labels", batch["tokens"])[:, 1:]
+    mask = batch.get("mask", jnp.ones_like(targets))[..., : targets.shape[1]]
+    T = h.shape[1]
+    chunk = min(cfg.loss_chunk, T)
+    n = -(-T // chunk)
+    pad = n * chunk - T
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = h.reshape(B, n, chunk, -1).swapaxes(0, 1)
+    tc = targets.reshape(B, n, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    V = head.shape[-1]
+
+    def ce_chunk(carry, inp):
+        hh, tt, mm = inp
+        # vocab-parallel CE: logits stay sharded on the vocab dim (lm_head
+        # is P(None, "model")); logsumexp reduces locally then all-reduces
+        # only the (B, chunk) scalars.
+        logits = (hh @ head).astype(jnp.float32)
+        # batch stays sharded over (pod, data) — a None there would force
+        # a full logits all-gather across the data axis (§Perf iter 1b)
+        logits = constrain(logits, P(("pod", "data"), None, "model"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit = <h, head[:, target]>: gather head *columns* (B·c·d
+        # bytes) instead of touching the (B, c, V) logits again.
+        cols = jnp.take(head, tt.reshape(-1), axis=1)  # (d, B*c)
+        cols = cols.reshape(head.shape[0], *tt.shape)  # (d, B, c)
+        gold = jnp.einsum("bcd,dbc->bc", hh.astype(jnp.float32),
+                          cols.astype(jnp.float32))
+        nll = (logz - gold) * mm
+        return (carry[0] + nll.sum(), carry[1] + mm.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(ce_chunk, (jnp.zeros(()), jnp.zeros(())), (hc, tc, mc))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + cfg.router_aux_coef * aux / max(cfg.n_layers, 1), {
+        "ce": loss, "aux": aux,
+    }
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg: ArchConfig, B: int, cache_len: int) -> Params:
+    """Per-layer cache stacked on the layer axis."""
+    dt = dtype_of(cfg.param_dtype)
+    nl = cfg.n_layers
+    if cfg.family == "ssm":
+        di, N, K = cfg.resolved_d_inner(), cfg.ssm_state, cfg.ssm_conv
+        return {
+            "h": jnp.zeros((nl, B, di, N), jnp.float32),
+            "conv": jnp.zeros((nl, B, K - 1, di), dt),
+        }
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim()
+    return {
+        "k": jnp.zeros((nl, B, cache_len, KV, Dh), dt),
+        "v": jnp.zeros((nl, B, cache_len, KV, Dh), dt),
+        "pos": jnp.full((nl, B, cache_len), -1, jnp.int32),
+    }
+
+
+def decode_step(params: Params, cache, batch, cfg: ArchConfig,
+                *, window: int = 0):
+    """One token. batch = {"tokens": (B,1), "pos": (B,)}. Returns (logits, cache)."""
+    x = params["embed"][batch["tokens"]].astype(dtype_of(cfg.compute_dtype))
+    pos = batch["pos"]
+
+    def body(x_c, scanned):
+        layer_p, layer_cache = scanned
+        x_out, new_cache = _block_decode(layer_p, x_c, cfg, pos, layer_cache, window)
+        return x_out, new_cache
+
+    if cfg.unroll_layers:
+        new_caches = []
+        for i in range(cfg.n_layers):
+            sl = jax.tree.map(lambda a: a[i], (params["layers"], cache))
+            x, nc = body(x, sl)
+            new_caches.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ head).astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill(params: Params, batch, cfg: ArchConfig):
+    """Full forward; returns (last-position logits, primed KV cache).
+
+    The cache is filled from the per-layer K/V collected during the scan.
+    """
+    x = _embed_inputs(params, batch, cfg)
+    B, S_total = x.shape[0], x.shape[1]
+    positions = _positions(cfg, B, S_total)
+    x = constrain(x, P(("pod", "data"), None, None))
+    if cfg.family == "ssm":
+        # run layers sequentially collecting final states: reuse block fn but
+        # capture states via a scan emitting them.
+        def body(xc, layer_p):
+            xn = L.rms_norm(xc, layer_p["norm"], cfg.norm_eps)
+            di, N = cfg.resolved_d_inner(), cfg.ssm_state
+            h0 = jnp.zeros((B, di, N), jnp.float32)
+            out, h_fin, conv_tail = S._mamba1_inner(
+                layer_p["mamba"], xn @ layer_p["mamba"]["in_proj"], cfg, h0
+            )
+            return xc + out, (h_fin, conv_tail)
+
+        if cfg.unroll_layers:
+            emits = []
+            for i in range(cfg.n_layers):
+                layer_p = jax.tree.map(lambda a: a[i], params["layers"])
+                x, em = body(x, layer_p)
+                emits.append(em)
+            h_stack, conv_stack = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *emits)
+        else:
+            x, (h_stack, conv_stack) = jax.lax.scan(body, x, params["layers"])
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (x[:, -1] @ head).astype(jnp.float32)
+        cache = {"h": h_stack, "conv": conv_stack}
+        return logits, cache
+    x, aux, kvs = _run_layers(params, x, cfg, positions, window=0,
+                              collect_kv=True, differentiable=False)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, -1] @ head).astype(jnp.float32)
+    k_stack, v_stack = kvs  # (nl, B, S, KV, Dh)
+    cache = {
+        "k": k_stack,
+        "v": v_stack,
+        "pos": jnp.broadcast_to(
+            jnp.arange(S_total, dtype=jnp.int32)[None, None, :],
+            (cfg.n_layers, B, S_total),
+        ),
+    }
+    return logits, cache

@@ -1,0 +1,215 @@
+"""Whisper-tiny style encoder–decoder (backbone only; conv frontend stubbed).
+
+The mel-spectrogram + conv feature extractor is a stub per the assignment
+carve-out: callers provide precomputed frame embeddings (B, T_enc, d_model).
+Positions are sinusoidal (computed on the fly, so a 500k-decode never
+materialises a position table). MLPs are SwiGLU for uniformity with the
+rest of the zoo (documented simplification vs whisper's GELU MLP).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.util import dtype_of
+
+Params = Dict[str, Any]
+
+
+def _run_stack(body, x, stacked: Params, n: int, unroll: bool):
+    """scan-or-unroll over a stacked layer pytree; collects emitted pytrees."""
+    if not unroll:
+        return jax.lax.scan(body, x, stacked)
+    emits = []
+    for i in range(n):
+        layer_p = jax.tree.map(lambda a: a[i], stacked)
+        x, em = body(x, layer_p)
+        emits.append(em)
+    if emits and emits[0] is not None:
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *emits)
+    return x, None
+
+
+def sinusoid_pos(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """positions (...,) -> (..., d) sinusoidal embedding."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_layer(key, cfg: ArchConfig, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "self_norm": jnp.ones((cfg.d_model,), dtype),
+        "cross_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "self_attn": L.init_attention(ks[0], cfg, dtype),
+        "cross_attn": L.init_attention(ks[1], cfg, dtype),
+        "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_whisper(key, cfg: ArchConfig) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    k_e, k_enc, k_dec, k_tok = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        # frontend stub projector (frames already embedded at frontend_dim)
+        "frame_proj": L.dense_init(k_e, (cfg.frontend_dim, cfg.d_model), dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "embed": L.embed_init(k_tok, (cfg.vocab_size, cfg.d_model), dtype),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": L.dense_init(jax.random.fold_in(k_tok, 1),
+                                (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def encode(params: Params, frames: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """frames: (B, T_enc, frontend_dim) -> (B, T_enc, d)."""
+    x = frames.astype(dtype_of(cfg.compute_dtype)) @ params["frame_proj"]
+    B, T, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x = x + sinusoid_pos(pos, cfg.d_model).astype(x.dtype)
+
+    def body(xc, layer_p):
+        h, _ = L.attention_block(
+            layer_p["attn"], L.rms_norm(xc, layer_p["attn_norm"], cfg.norm_eps),
+            cfg, pos, causal=False,
+        )
+        xc = xc + h
+        xc = xc + L.mlp_block(
+            layer_p["mlp"], L.rms_norm(xc, layer_p["mlp_norm"], cfg.norm_eps))
+        return xc, None
+
+    x, _ = _run_stack(body, x, params["enc_layers"], cfg.encoder_layers,
+                      cfg.unroll_layers)
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attend(layer_p: Params, x, enc_out, cfg: ArchConfig):
+    """Cross-attention: queries from decoder x, K/V from encoder output."""
+    B, S, d = x.shape
+    xn = L.rms_norm(x, layer_p["cross_norm"], cfg.norm_eps)
+    p = layer_p["cross_attn"]
+    Dh = cfg.resolved_head_dim()
+    q = (xn @ p["wq"]).reshape(B, S, cfg.n_heads, Dh)
+    k = (enc_out @ p["wk"]).reshape(B, -1, cfg.n_kv_heads, Dh)
+    v = (enc_out @ p["wv"]).reshape(B, -1, cfg.n_kv_heads, Dh)
+    out = L.chunked_attention(q, k, v, causal=False,
+                              q_chunk=cfg.attn_chunk, k_chunk=cfg.attn_chunk,
+                              unroll_kv=cfg.unroll_attn)
+    return x + out.reshape(B, S, -1) @ p["wo"]
+
+
+def decoder_forward(params: Params, tokens, enc_out, cfg: ArchConfig,
+                    differentiable: bool = True):
+    x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = x + sinusoid_pos(pos, cfg.d_model).astype(x.dtype)
+
+    def body(xc, layer_p):
+        h, kv = L.attention_block(
+            layer_p["self_attn"], L.rms_norm(xc, layer_p["self_norm"], cfg.norm_eps),
+            cfg, pos, causal=True, differentiable=differentiable,
+        )
+        xc = xc + h
+        xc = _cross_attend(layer_p, xc, enc_out, cfg)
+        xc = xc + L.mlp_block(
+            layer_p["mlp"], L.rms_norm(xc, layer_p["mlp_norm"], cfg.norm_eps))
+        return xc, kv
+
+    x, kvs = _run_stack(body, x, params["dec_layers"], cfg.n_layers,
+                        cfg.unroll_layers)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), kvs
+
+
+def whisper_loss(params: Params, batch, cfg: ArchConfig):
+    """batch: {"frames": (B,T_enc,F), "tokens": (B,S)}."""
+    enc_out = encode(params, batch["frames"], cfg)
+    x, _ = decoder_forward(params, batch["tokens"], enc_out, cfg)
+    h = x[:, :-1]
+    targets = batch["tokens"][:, 1:]
+    logits = (h @ params["lm_head"]).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    return loss, {"ce": loss, "aux": jnp.zeros(())}
+
+
+def whisper_prefill(params: Params, batch, cfg: ArchConfig):
+    """Encode frames + run the decoder over the prompt, priming the cache."""
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x, kvs = decoder_forward(params, tokens, enc_out, cfg,
+                             differentiable=False)
+    logits = (x[:, -1] @ params["lm_head"]).astype(jnp.float32)
+    k_stack, v_stack = kvs
+    cache = {
+        "k": k_stack,
+        "v": v_stack,
+        "pos": jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, None],
+            (cfg.n_layers, B, S)),
+        "enc_out": enc_out,
+    }
+    return logits, cache
+
+
+def init_whisper_cache(cfg: ArchConfig, B: int, cache_len: int) -> Params:
+    dt = dtype_of(cfg.param_dtype)
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim()
+    return {
+        "k": jnp.zeros((cfg.n_layers, B, cache_len, KV, Dh), dt),
+        "v": jnp.zeros((cfg.n_layers, B, cache_len, KV, Dh), dt),
+        "pos": jnp.full((cfg.n_layers, B, cache_len), -1, jnp.int32),
+        # encoder output is part of the decode state (computed at prefill)
+        "enc_out": jnp.zeros((B, cfg.encoder_seq, cfg.d_model), dt),
+    }
+
+
+def whisper_decode_step(params: Params, cache, batch, cfg: ArchConfig,
+                        *, window: int = 0):
+    x = params["embed"][batch["tokens"]].astype(dtype_of(cfg.compute_dtype))
+    pos = batch["pos"]
+    x = x + sinusoid_pos(pos[:, None], cfg.d_model).astype(x.dtype)
+    enc_out = cache["enc_out"]
+
+    def body(xc, scanned):
+        layer_p, k_c, v_c, pos_c = scanned
+        h, new_kv = L.attention_decode_block(
+            layer_p["self_attn"],
+            L.rms_norm(xc, layer_p["self_norm"], cfg.norm_eps),
+            cfg, pos, {"k": k_c, "v": v_c, "pos": pos_c}, window=window,
+        )
+        xc = xc + h
+        xc = _cross_attend(layer_p, xc, enc_out, cfg)
+        xc = xc + L.mlp_block(
+            layer_p["mlp"], L.rms_norm(xc, layer_p["mlp_norm"], cfg.norm_eps))
+        return xc, (new_kv["k"], new_kv["v"], new_kv["pos"])
+
+    x, (k_n, v_n, pos_n) = _run_stack(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["pos"]),
+        cfg.n_layers, cfg.unroll_layers)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"k": k_n, "v": v_n, "pos": pos_n, "enc_out": enc_out}

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adam, adamw, sgd, momentum, clip_by_global_norm,
+    cosine_schedule, linear_warmup_cosine, constant_schedule,
+)

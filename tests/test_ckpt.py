@@ -1,0 +1,46 @@
+"""Checkpoint round-trip and rolling-GC behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, load_checkpoint, save_checkpoint
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.bfloat16)},
+        "opt": [jnp.zeros((2, 2)), (jnp.asarray(3), jnp.asarray(2.5))],
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    p = str(tmp_path / "ck.msgpack.zst")
+    tree = _tree()
+    save_checkpoint(p, tree, meta={"note": "hi"})
+    got, meta = load_checkpoint(p)
+    assert meta["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype, (a.dtype, b.dtype)
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_structure_preserved(tmp_path):
+    p = str(tmp_path / "ck.msgpack.zst")
+    tree = _tree()
+    save_checkpoint(p, tree)
+    got, _ = load_checkpoint(p)
+    assert jax.tree.structure(tree) == jax.tree.structure(got)
+
+
+def test_manager_rolls(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30):
+        mgr.save(s, {"x": jnp.asarray([s])})
+    assert mgr.latest_step() == 30
+    got, meta = mgr.restore_latest()
+    assert int(got["x"][0]) == 30 and meta["step"] == 30
+    assert len(mgr._steps()) == 2  # step 10 garbage-collected

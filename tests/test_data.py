@@ -1,0 +1,67 @@
+"""Synthetic corpus: Table II mixture, shard composition, batching."""
+import numpy as np
+import pytest
+
+from repro.core.profiling.users import CATEGORIES, CATEGORY_PROBS, make_users
+from repro.data import voice
+
+
+def test_global_mixture_matches_table_ii():
+    """Across many users' shards, the category mixture should approximate
+    the paper's Table II distribution (32.7/16.0/31.9/19.4)."""
+    users = make_users(150, seed=0)
+    counts = {c: 0 for c in CATEGORIES}
+    for u in users:
+        shard = voice.make_client_shard(u, base_size=16, seed=0)
+        for c, n in shard.category_counts().items():
+            counts[c] += n
+    total = sum(counts.values())
+    for c, p in zip(CATEGORIES, CATEGORY_PROBS):
+        assert abs(counts[c] / total - p) < 0.06, (c, counts[c] / total, p)
+
+
+def test_shard_reflects_user_mix():
+    users = make_users(40, seed=1)
+    # pick a user with a strongly skewed mixture
+    u = max(users, key=lambda x: max(x.category_mix.values()))
+    shard = voice.make_client_shard(u, base_size=40, seed=1)
+    counts = shard.category_counts()
+    top_cat = max(u.category_mix, key=u.category_mix.get)
+    assert counts[top_cat] == max(counts.values())
+
+
+def test_frames_noise_scales_with_context():
+    ids = voice.encode_text("turn off the lights")
+    rng1 = np.random.RandomState(0)
+    rng2 = np.random.RandomState(0)
+    quiet = voice.synth_frames(ids, 0.1, rng1)
+    noisy = voice.synth_frames(ids, 0.9, rng2)
+    base = np.repeat(voice.CHAR_BANK[ids], voice.FRAMES_PER_CHAR, axis=0)
+    assert np.abs(noisy - quiet).mean() > 0.1  # noise level actually differs
+
+
+def test_batchify_shapes_and_lengths():
+    users = make_users(3, seed=2)
+    shard = voice.make_client_shard(users[0], base_size=6, seed=2)
+    b = voice.batchify(shard.utterances, max_frames=320, max_labels=40)
+    B = len(shard.utterances)
+    assert b["frames"].shape == (B, 320, voice.FEAT_DIM)
+    assert b["labels"].shape == (B, 40)
+    assert (b["label_len"] > 0).all()
+    assert (b["frame_len"] == 8 * b["label_len"]).all()
+
+
+def test_markov_tokens_learnable_structure():
+    from repro.data.lm import MarkovTokens
+
+    src = MarkovTokens(64, seed=0)
+    rng = np.random.RandomState(0)
+    toks = src.sample(rng, 4, 256)
+    assert toks.shape == (4, 256)
+    # bigram entropy should be far below uniform (structure exists)
+    pairs = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            pairs.setdefault(int(a), []).append(int(b))
+    branch = np.mean([len(set(v)) for v in pairs.values()])
+    assert branch < 20  # uniform would approach min(64, n_samples)

@@ -1,0 +1,77 @@
+"""FL robustness options: straggler dropout, FedProx, server momentum,
+context/hardware drift triggers."""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.profiling.users import drift_device, drift_user, make_users
+from repro.core.profiling.hardware import make_fleet
+from repro.fl import FLServer
+
+
+def _cfg(**kw):
+    base = dict(n_clients=6, clients_per_round=3, n_rounds=2, local_steps=1,
+                local_batch=2, lr=1e-3, planner="unified", seed=0)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_dropout_reduces_participation():
+    srv = FLServer(_cfg(dropout_prob=0.99, seed=3), shard_size=6)
+    log = srv.run_round(0)
+    assert log.n_participating <= 1  # nearly everyone straggled
+
+
+def test_dropout_all_skips_aggregation_safely():
+    srv = FLServer(_cfg(dropout_prob=1.0), shard_size=6)
+    before = jax.tree.leaves(srv.params)[0].copy()
+    log = srv.run_round(0)
+    assert log.n_participating == 0
+    after = jax.tree.leaves(srv.params)[0]
+    np.testing.assert_array_equal(before, after)  # params untouched
+
+
+def test_fedprox_shrinks_delta_norm():
+    """The proximal term pulls local weights toward the global model, so
+    the returned delta must be smaller in norm."""
+    def delta_norm(mu):
+        srv = FLServer(_cfg(fedprox_mu=mu, local_steps=4), shard_size=6)
+        client = srv.clients[0]
+        delta, _ = client.local_update(srv.params, 16, local_steps=4,
+                                       local_batch=2, lr=5e-2,
+                                       fedprox_mu=mu)
+        return float(jnp.sqrt(sum(jnp.sum(x ** 2)
+                                  for x in jax.tree.leaves(delta))))
+
+    assert delta_norm(10.0) < delta_norm(0.0)
+
+
+def test_server_momentum_accumulates():
+    srv = FLServer(_cfg(server_momentum=0.9), shard_size=6)
+    srv.run(2)
+    assert hasattr(srv, "_velocity")
+    vnorm = float(sum(jnp.sum(jnp.abs(v))
+                      for v in jax.tree.leaves(srv._velocity)))
+    assert vnorm > 0
+
+
+def test_drift_changes_and_triggers():
+    users = make_users(50, seed=0)
+    rng = random.Random(0)
+    changed = sum(drift_user(u, rng) for u in users for _ in range(3))
+    assert changed > 0  # drift actually fires at these probabilities
+    fleet = make_fleet(50, seed=0)
+    hw_changed = sum(drift_device(s, rng) for s in fleet for _ in range(3))
+    assert hw_changed > 0
+
+
+def test_drift_tracked_by_server():
+    srv = FLServer(_cfg(seed=5), shard_size=6)
+    srv.run(2)
+    assert hasattr(srv, "last_drift")
+    nc, nh = srv.last_drift
+    assert nc >= 0 and nh >= 0

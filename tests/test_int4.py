@@ -1,0 +1,45 @@
+"""int4 packing + int4 qmatmul path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ops import pack_int4, qmatmul_int4, quantize_weights_int4, unpack_int4
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 2 ** 16))
+def test_pack_unpack_roundtrip(kh, n, seed):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randint(-8, 8, size=(2 * kh, n)), jnp.int8)
+    assert jnp.array_equal(unpack_int4(pack_int4(q)), q)
+
+
+def test_packed_is_half_size():
+    q = jnp.zeros((128, 64), jnp.int8)
+    assert pack_int4(q).nbytes == q.nbytes // 2
+
+
+def test_qmatmul_int4_matches_dequant():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(32, 128).astype(np.float32))
+    w = jnp.asarray(rng.randn(128, 64).astype(np.float32))
+    packed, scale = quantize_weights_int4(w)
+    got = qmatmul_int4(x, packed, scale)
+    w_deq = unpack_int4(packed).astype(jnp.float32) * scale[None, :]
+    want = x @ w_deq
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_int4_error_larger_than_int8():
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(16, 64).astype(np.float32))
+    w = jnp.asarray(rng.randn(64, 32).astype(np.float32))
+    exact = x @ w
+    q8, s8 = ops.quantize_weights(w, 8)
+    e8 = float(jnp.abs(ops.qmatmul(x, q8, s8) - exact).mean())
+    p4, s4 = quantize_weights_int4(w)
+    e4 = float(jnp.abs(qmatmul_int4(x, p4, s4) - exact).mean())
+    assert e4 > e8 > 0

@@ -1,0 +1,122 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles, with shape sweeps
+(hypothesis) — kernels run in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import qrange
+from repro.kernels import ops, ref
+
+
+@settings(deadline=None, max_examples=12)
+@given(st.integers(1, 4000), st.sampled_from([4, 8, 16]),
+       st.integers(0, 2 ** 16))
+def test_fake_quant_kernel_matches_ref(n, bits, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(n).astype(np.float32) * rng.uniform(0.1, 10))
+    got = ops.fake_quant(x, bits)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / qrange(bits)
+    want = ref.fake_quant_ref(x, scale, bits)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (100, 257), (3, 5000), (1, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fake_quant_kernel_shapes_dtypes(shape, dtype):
+    x = jnp.asarray(np.random.RandomState(0).randn(*shape), dtype)
+    got = ops.fake_quant(x, 8)
+    assert got.shape == shape and got.dtype == dtype
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / qrange(8)
+    want = ref.fake_quant_ref(x.astype(jnp.float32), scale, 8)
+    np.testing.assert_allclose(got.astype(jnp.float32), want,
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_fake_quant_kernel_stochastic_unbiased():
+    x = jnp.asarray(np.random.RandomState(1).randn(512), jnp.float32)
+    outs = jnp.stack([
+        ops.fake_quant(x, 4, stochastic=True, key=jax.random.key(i))
+        for i in range(48)])
+    amax = jnp.max(jnp.abs(x))
+    scale = amax / qrange(4)
+    err = jnp.abs(jnp.mean(outs, 0) - x)
+    # Bernoulli rounding: per-sample var <= scale^2/4 -> 5 sigma over 48 draws
+    assert float(jnp.max(err)) < 5 * float(scale) / (2 * np.sqrt(48)) + 1e-6
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(1, 12), st.integers(10, 6000), st.integers(0, 2 ** 16))
+def test_ota_kernel_matches_ref(k, m, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(k, m).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 1, k).astype(np.float32))
+    noise = jnp.asarray(rng.randn(m).astype(np.float32))
+    std = jnp.float32(rng.uniform(0, 0.5))
+    got = ops.ota_aggregate(x, w, noise, std)
+    want = ref.ota_aggregate_ref(x, w, noise, std)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(1, 300), st.integers(1, 300), st.integers(1, 300),
+       st.integers(0, 2 ** 16))
+def test_qmatmul_matches_ref(m, k, n, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(m, k).astype(np.float32))
+    w = jnp.asarray(rng.randn(k, n).astype(np.float32))
+    wq, sc = ops.quantize_weights(w, 8)
+    got = ops.qmatmul(x, wq, sc)
+    want = ref.qmatmul_ref(x, wq, sc)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,KV,D", [
+    (2, 128, 4, 4, 64),   # MHA, tile-aligned
+    (1, 256, 4, 2, 32),   # GQA
+    (2, 200, 2, 1, 64),   # MQA, non-tile-multiple seq
+])
+def test_flash_attention_matches_naive(B, S, H, KV, D):
+    import jax.numpy as jnp
+
+    q = jax.random.normal(jax.random.key(0), (B, S, H, D))
+    k = jax.random.normal(jax.random.key(1), (B, S, KV, D))
+    v = jax.random.normal(jax.random.key(2), (B, S, KV, D))
+    got = ops.flash_mha(q, k, v, causal=True)
+    G = H // KV
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    want = ref.flash_attention_ref(
+        q.swapaxes(1, 2).reshape(B * H, S, D),
+        kr.swapaxes(1, 2).reshape(B * H, S, D),
+        vr.swapaxes(1, 2).reshape(B * H, S, D),
+    ).reshape(B, H, S, D).swapaxes(1, 2)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    import jax.numpy as jnp
+
+    q = jax.random.normal(jax.random.key(5), (1, 128, 2, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(6), (1, 128, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(7), (1, 128, 2, 64), jnp.bfloat16)
+    got = ops.flash_mha(q, k, v)
+    want = ref.flash_attention_ref(
+        q.swapaxes(1, 2).reshape(2, 128, 64),
+        k.swapaxes(1, 2).reshape(2, 128, 64),
+        v.swapaxes(1, 2).reshape(2, 128, 64)).reshape(1, 2, 128, 64).swapaxes(1, 2)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=3e-2, atol=3e-2)
+
+
+def test_qmatmul_int8_close_to_fp32():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(64, 256).astype(np.float32))
+    w = jnp.asarray(rng.randn(256, 128).astype(np.float32))
+    wq, sc = ops.quantize_weights(w, 8)
+    got = ops.qmatmul(x, wq, sc)
+    rel = float(jnp.linalg.norm(got - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.01  # int8 per-channel should be <1% off

@@ -1,0 +1,356 @@
+"""Model-zoo correctness: per-arch smoke tests (reduced variants), numeric
+equivalences (chunked attention vs naive, chunked SSM scans vs sequential),
+prefill/decode consistency, CTC vs brute force."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.all_archs import ASSIGNED_ARCHS
+from repro.models import build_model
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+def _batch_for(cfg, B=2, S_=32, seed=1):
+    batch = {"tokens": jax.random.randint(jax.random.key(seed), (B, S_),
+                                          0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.ones((B, 8, cfg.frontend_dim), jnp.float32) * 0.1
+    if cfg.family == "audio":
+        batch["frames"] = jnp.ones((B, cfg.encoder_seq, cfg.frontend_dim),
+                                   jnp.float32) * 0.1
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# per-arch smoke: one forward + one train step, shapes + no NaNs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    from repro.launch.steps import init_train_state, make_train_step
+    from repro.optim import adamw
+
+    cfg = get_arch(arch).reduced()
+    assert cfg.n_layers == 2 and cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    model = build_model(cfg)
+    opt = adamw(1e-3)
+    state = init_train_state(model, opt, jax.random.key(0))
+    batch = _batch_for(cfg)
+    loss, _ = model.loss(state["params"], batch)
+    assert loss.shape == () and bool(jnp.isfinite(loss))
+    new_state, metrics = jax.jit(make_train_step(model, opt))(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # params actually changed and stayed finite
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         state["params"], new_state["params"])
+    assert max(jax.tree.leaves(moved)) > 0
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree.leaves(new_state["params"]))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_arch_smoke_decode_step(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    if model.cfg.family == "ds2":
+        pytest.skip("ds2 is non-autoregressive")
+    params = model.init(jax.random.key(0))
+    B = 2
+    cache = model.init_cache(B, 16)
+    logits, new_cache = model.decode(
+        params, cache,
+        {"tokens": jnp.ones((B, 1), jnp.int32),
+         "pos": jnp.zeros((B,), jnp.int32)})
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+# ---------------------------------------------------------------------------
+# numeric equivalences
+# ---------------------------------------------------------------------------
+
+
+def _naive_attention(q, k, v, causal=True, window=0):
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qh = q.reshape(B, Sq, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qh, k.astype(jnp.float32)) * D ** -0.5
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bkgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+
+
+@pytest.mark.parametrize("causal,window,Sq", [
+    (True, 0, 64), (True, 0, 100), (False, 0, 64), (True, 16, 64)])
+def test_chunked_attention_matches_naive(causal, window, Sq):
+    key = jax.random.key(0)
+    B, H, KV, D = 2, 4, 2, 16
+    q = jax.random.normal(key, (B, Sq, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Sq, KV, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Sq, KV, D))
+    got = L.chunked_attention(q, k, v, causal=causal, window=window,
+                              q_chunk=32, k_chunk=32)
+    want = _naive_attention(q, k, v, causal, window)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_nondiff_path_matches():
+    key = jax.random.key(3)
+    B, S_, H, KV, D = 1, 96, 4, 4, 8
+    q = jax.random.normal(key, (B, S_, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S_, KV, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S_, KV, D))
+    a = L.chunked_attention(q, k, v, q_chunk=32, k_chunk=32,
+                            differentiable=True)
+    b = L.chunked_attention(q, k, v, q_chunk=32, k_chunk=32,
+                            differentiable=False)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def _mamba1_sequential(dt, A, Bm, Cm, x):
+    B_, T, d = x.shape
+    N = A.shape[1]
+    h = jnp.zeros((B_, d, N))
+    ys = []
+    for t in range(T):
+        a = jnp.exp(dt[:, t, :, None] * A)
+        h = a * h + (dt[:, t] * x[:, t])[..., None] * Bm[:, t, None, :]
+        ys.append(jnp.einsum("bdn,bn->bd", h, Cm[:, t]))
+    return jnp.stack(ys, 1), h
+
+
+def test_mamba1_chunked_scan_matches_sequential():
+    rng = np.random.RandomState(0)
+    B_, T, d, N = 2, 37, 8, 4
+    dt = jnp.asarray(np.abs(rng.randn(B_, T, d)) * 0.1, jnp.float32)
+    A = -jnp.asarray(np.abs(rng.randn(d, N)) + 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.randn(B_, T, N), jnp.float32)
+    Cm = jnp.asarray(rng.randn(B_, T, N), jnp.float32)
+    x = jnp.asarray(rng.randn(B_, T, d), jnp.float32)
+    h0 = jnp.zeros((B_, d, N))
+    got_y, got_h = S._mamba1_chunked_scan(dt, A, Bm, Cm, x, h0, chunk=8)
+    want_y, want_h = _mamba1_sequential(dt, A, Bm, Cm, x)
+    np.testing.assert_allclose(got_y, want_y, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_h, want_h, rtol=1e-4, atol=1e-4)
+
+
+def _ssd_sequential(x, dt, A, Bm, Cm, h0):
+    B_, T, H, Pd = x.shape
+    h = h0
+    ys = []
+    for t in range(T):
+        decay = jnp.exp(dt[:, t] * A)  # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", x[:, t] * dt[:, t][..., None],
+                         Bm[:, t])
+        h = decay[:, :, None, None] * h + upd
+        ys.append(jnp.einsum("bhpn,bn->bhp", h, Cm[:, t]))
+    return jnp.stack(ys, 1), h
+
+
+def test_ssd_chunked_matches_sequential():
+    rng = np.random.RandomState(1)
+    B_, T, H, Pd, N = 2, 29, 3, 4, 5
+    x = jnp.asarray(rng.randn(B_, T, H, Pd), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(B_, T, H)) * 0.2, jnp.float32)
+    A = -jnp.asarray(np.abs(rng.randn(H)) + 0.2, jnp.float32)
+    Bm = jnp.asarray(rng.randn(B_, T, N), jnp.float32)
+    Cm = jnp.asarray(rng.randn(B_, T, N), jnp.float32)
+    h0 = jnp.zeros((B_, H, Pd, N))
+    got_y, got_h = S._ssd_scan(x, dt, A, Bm, Cm, h0, chunk=8)
+    want_y, want_h = _ssd_sequential(x, dt, A, Bm, Cm, h0)
+    np.testing.assert_allclose(got_y, want_y, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_h, want_h, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# prefill + decode == full forward (next-token logits)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "falcon-mamba-7b",
+                                  "zamba2-2.7b", "kimi-k2-1t-a32b"])
+def test_prefill_decode_consistency(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S_ = 2, 24
+    tokens = jax.random.randint(jax.random.key(5), (B, S_ + 1), 0,
+                                cfg.vocab_size)
+    # reference: full forward over S_+1 tokens -> logits at position S_
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import _forward
+        x, _ = _forward(params, tokens, cfg, collect_state=False)
+        want = (x[:, -1] @ params["lm_head"]).astype(jnp.float32)
+    else:
+        from repro.models.transformer import lm_logits_and_aux
+        x, head, _ = lm_logits_and_aux(params, {"tokens": tokens}, cfg)
+        want = (x[:, -1] @ head).astype(jnp.float32)
+    # prefill on S_ tokens, then decode token S_
+    _, cache = model.prefill(params, {"tokens": tokens[:, :S_]})
+    cache = model.grow_cache(cache, S_ + 1)
+    got, _ = model.decode(params, cache,
+                          {"tokens": tokens[:, S_:],
+                           "pos": jnp.full((B,), S_, jnp.int32)})
+    np.testing.assert_allclose(
+        jax.nn.log_softmax(got), jax.nn.log_softmax(want),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_decode_receptive_field():
+    """With window W and L layers the decode receptive field is L*(W-1):
+    tokens outside it must not affect the logits; tokens inside must."""
+    cfg = get_arch("stablelm-1.6b").reduced()  # L = 2
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, W, T = 1, 8, 20
+    toks = jax.random.randint(jax.random.key(7), (B, T), 0, cfg.vocab_size)
+
+    def run(tk):
+        cache = model.init_cache(B, W)
+        logits = None
+        for t in range(T):
+            logits, cache = model.decode(
+                params, cache, {"tokens": tk[:, t : t + 1],
+                                "pos": jnp.full((B,), t, jnp.int32)},
+                window=W)
+        return logits
+
+    base = run(toks)
+    # positions 0..3 are beyond 2*(W-1)=14 steps back from pos 19 -> no effect
+    far = run(toks.at[:, :4].set((toks[:, :4] + 3) % cfg.vocab_size))
+    np.testing.assert_allclose(base, far, rtol=1e-5, atol=1e-5)
+    # a token inside the window must change the logits
+    near = run(toks.at[:, 18].set((toks[:, 18] + 3) % cfg.vocab_size))
+    assert float(jnp.abs(base - near).max()) > 1e-3
+
+
+def test_whisper_prefill_decode_consistency():
+    """enc-dec: prefill(S) + decode(S+1th) == full decoder forward."""
+    cfg = get_arch("whisper-tiny").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S_ = 2, 12
+    frames = jnp.ones((B, cfg.encoder_seq, cfg.frontend_dim)) * 0.1
+    tokens = jax.random.randint(jax.random.key(3), (B, S_ + 1), 0,
+                                cfg.vocab_size)
+    from repro.models.whisper import decoder_forward, encode
+
+    enc = encode(params, frames, cfg)
+    x, _ = decoder_forward(params, tokens, enc, cfg)
+    want = (x[:, -1] @ params["lm_head"]).astype(jnp.float32)
+
+    _, cache = model.prefill(params, {"frames": frames,
+                                      "tokens": tokens[:, :S_]})
+    cache = model.grow_cache(cache, S_ + 1)
+    got, _ = model.decode(params, cache,
+                          {"tokens": tokens[:, S_:],
+                           "pos": jnp.full((B,), S_, jnp.int32)})
+    np.testing.assert_allclose(jax.nn.log_softmax(got),
+                               jax.nn.log_softmax(want), rtol=2e-3, atol=2e-3)
+
+
+def test_vlm_prefill_runs_with_patches():
+    """VLM: prefill consumes the stub patch prefix; decode continues."""
+    cfg = get_arch("qwen2-vl-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S_, NP = 2, 10, 4
+    batch = {"tokens": jax.random.randint(jax.random.key(4), (B, S_), 0,
+                                          cfg.vocab_size),
+             "patches": jnp.ones((B, NP, cfg.frontend_dim)) * 0.1}
+    logits, cache = model.prefill(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    # cache covers patches + tokens
+    assert cache["k"].shape[2] == S_ + NP
+    cache = model.grow_cache(cache, S_ + NP + 1)
+    l2, _ = model.decode(params, cache,
+                         {"tokens": jnp.ones((B, 1), jnp.int32),
+                          "pos": jnp.full((B,), S_ + NP, jnp.int32)})
+    assert bool(jnp.all(jnp.isfinite(l2)))
+
+
+# ---------------------------------------------------------------------------
+# CTC
+# ---------------------------------------------------------------------------
+
+
+def _brute_force_ctc(log_probs, labels):
+    """Enumerate all alignments (tiny T, L only)."""
+    import itertools
+
+    T, V = log_probs.shape
+    L = len(labels)
+
+    def collapse(path):
+        out = []
+        prev = -1
+        for p in path:
+            if p != 0 and p != prev:
+                out.append(p)
+            prev = p
+        return out
+
+    total = -np.inf
+    for path in itertools.product(range(V), repeat=T):
+        if collapse(path) == list(labels):
+            lp = sum(log_probs[t, p] for t, p in enumerate(path))
+            total = np.logaddexp(total, lp)
+    return total
+
+
+def test_ctc_matches_brute_force():
+    from repro.models.deepspeech2 import ctc_loss
+
+    rng = np.random.RandomState(0)
+    T, V, L = 5, 4, 2
+    logits = rng.randn(1, T, V).astype(np.float32)
+    lp = jax.nn.log_softmax(jnp.asarray(logits), -1)
+    labels = jnp.asarray([[1, 2]], jnp.int32)
+    got = ctc_loss(lp, labels, jnp.asarray([T]), jnp.asarray([L]))
+    want = -_brute_force_ctc(np.asarray(lp[0]), [1, 2]) / L
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
+
+
+def test_mrope_sections_rotate_by_stream():
+    """M-RoPE: with distinct position streams, different sections rotate
+    differently; with identical streams it reduces to standard RoPE."""
+    B, S_, H, D = 1, 6, 2, 16
+    x = jax.random.normal(jax.random.key(0), (B, S_, H, D))
+    pos = jnp.arange(S_, dtype=jnp.int32)[None]
+    pos3 = jnp.broadcast_to(pos[:, None], (B, 3, S_))
+    a = L.apply_mrope(x, pos3, 100.0, (2, 3, 3))
+    b = L.apply_rope(x, pos, 100.0)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_flash_kernel_prefill_matches_jnp_path():
+    """cfg.use_flash_kernel routes prefill attention through the Pallas
+    kernel (interpret mode on CPU) — logits must match the jnp path."""
+    cfg = get_arch("stablelm-1.6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = {"tokens": jax.random.randint(jax.random.key(9), (2, 24), 0,
+                                          cfg.vocab_size)}
+    want, _ = model.prefill(params, batch)
+
+    cfg_fl = cfg.with_(use_flash_kernel=True)
+    model_fl = build_model(cfg_fl)
+    got, _ = model_fl.prefill(params, batch)
+    np.testing.assert_allclose(jax.nn.log_softmax(got),
+                               jax.nn.log_softmax(want),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,86 @@
+"""Property tests for the quantization primitives (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+BITS = [4, 8, 16]
+
+
+@st.composite
+def arrays(draw, max_len=2000):
+    n = draw(st.integers(8, max_len))
+    seed = draw(st.integers(0, 2 ** 16))
+    scale = draw(st.floats(1e-3, 1e3))
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(n).astype(np.float32) * scale)
+
+
+@settings(deadline=None, max_examples=25)
+@given(arrays(), st.sampled_from(BITS))
+def test_fake_quant_error_bound(x, bits):
+    """|x - fq(x)| <= scale/2 elementwise (round-to-nearest), except clips.
+
+    fp32 slack: x/scale near half-integers rounds either way, and the
+    division/multiplication each lose ~1 ulp of |x| — so the bound gets a
+    half-scale relative term plus a few ulps of the tensor max.
+    """
+    q, scale = quant.quantize(x, bits)
+    fq = quant.fake_quant(x, bits)
+    qmax = quant.qrange(bits)
+    amax = jnp.max(jnp.abs(x))
+    inside = jnp.abs(x) <= qmax * scale
+    err = jnp.abs(x - fq)
+    bound = 0.5 * scale * (1 + 1e-3) + 4e-6 * amax + 1e-6
+    assert jnp.all(jnp.where(inside, err <= bound, True))
+
+
+@settings(deadline=None, max_examples=25)
+@given(arrays(), st.sampled_from(BITS))
+def test_quantize_range(x, bits):
+    q, _ = quant.quantize(x, bits)
+    qmax = quant.qrange(bits)
+    assert int(jnp.max(jnp.abs(q))) <= qmax
+
+
+@settings(deadline=None, max_examples=10)
+@given(arrays(max_len=400), st.sampled_from([4, 8]))
+def test_stochastic_rounding_unbiased(x, bits):
+    """E[fq_stochastic(x)] == x (within CLT tolerance over repeats)."""
+    keys = jax.random.split(jax.random.key(0), 64)
+    fqs = jnp.stack([quant.fake_quant(x, bits, key=k) for k in keys])
+    mean = jnp.mean(fqs, axis=0)
+    _, scale = quant.quantize(x, bits)
+    # Bernoulli rounding: per-sample var <= scale^2/4; mean of 64 draws
+    # has std <= scale/16 -> 5 sigma bound
+    tol = 5 * float(scale) / (2 * np.sqrt(64)) + 1e-6
+    qmax = quant.qrange(bits)
+    inside = jnp.abs(x) <= (qmax - 1) * scale
+    assert float(jnp.max(jnp.where(inside, jnp.abs(mean - x), 0.0))) <= tol
+
+
+def test_monotone_bits():
+    """More bits => no larger RMS error."""
+    x = jnp.asarray(np.random.RandomState(0).randn(4096).astype(np.float32))
+    errs = [float(quant.quant_error(x, b)) for b in (4, 8, 16, 32)]
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] == 0.0  # 32 bits is the identity
+
+
+def test_tree_roundtrip():
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": [jnp.ones((3, 4)), jnp.linspace(-2, 2, 7)]}
+    q, s = quant.quantize_tree(tree, 8)
+    dq = quant.dequantize_tree(q, s, 8)
+    for orig, rec in zip(jax.tree.leaves(tree), jax.tree.leaves(dq)):
+        np.testing.assert_allclose(orig, rec, atol=float(jnp.max(jnp.abs(orig))) / 100)
+
+
+def test_ste_gradient_is_identity():
+    x = jnp.linspace(-1, 1, 64)
+    g = jax.grad(lambda v: jnp.sum(quant.ste_fake_quant(v, 8) ** 2))(x)
+    # gradient flows as if fq were identity: d/dx sum(fq(x)^2) = 2 fq(x)
+    np.testing.assert_allclose(g, 2 * quant.fake_quant(x, 8), rtol=1e-5)

@@ -1,0 +1,87 @@
+"""Continuous-batching serve engine: correctness + scheduling behaviour."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.serve import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_arch("stablelm-1.6b").reduced()
+    return ServeEngine(cfg, max_batch=4, cache_len=96)
+
+
+def _requests(n, seed=0, vocab=512):
+    rng = np.random.RandomState(seed)
+    return [Request(i, rng.randint(0, vocab, size=rng.randint(4, 12))
+                    .astype(np.int32), max_new_tokens=int(rng.randint(4, 16)))
+            for i in range(n)]
+
+
+def test_drains_all_requests(engine):
+    for r in _requests(9, seed=1):
+        engine.submit(r)
+    done = engine.run_until_drained()
+    assert len(done) >= 9
+    for r in done:
+        assert r.state == "DONE"
+        assert 1 <= len(r.generated) <= r.max_new_tokens
+
+
+def test_continuous_batching_interleaves():
+    cfg = get_arch("stablelm-1.6b").reduced()
+    eng = ServeEngine(cfg, max_batch=4, cache_len=96)
+    for r in _requests(8, seed=2):
+        eng.submit(r)
+    eng.run_until_drained()
+    s = eng.stats()
+    # with 8 requests on 4 slots, slots must be refilled mid-run:
+    # average active batch strictly above 1
+    assert s["tokens_per_step"] > 1.0
+    assert s["completed"] == 8
+
+
+def test_slot_isolation_cache_state():
+    """A request's cache state after prefill must not depend on its
+    co-batched neighbours.
+
+    Compared at the KV-cache level (the prompt's K/V entries), which is
+    pre-argmax: greedy token sequences are brittle to run-to-run argmax
+    flips on the near-tied logits of an untrained model, but the slot's
+    prefill cache rows are a pure function of the prompt.
+    """
+    cfg = get_arch("stablelm-1.6b").reduced()
+    prompt = np.arange(1, 9, dtype=np.int32)
+
+    def prefill_cache(extra_traffic: bool):
+        eng = ServeEngine(cfg, max_batch=4, cache_len=96)
+        if extra_traffic:
+            for r in _requests(3, seed=3):
+                r.request_id += 100
+                eng.submit(r)
+            eng.step()
+        eng.submit(Request(0, prompt, max_new_tokens=8))
+        eng.step()  # admits request 0 into a free slot (prefill)
+        req0 = next(r for r in (eng.slots + eng.completed)
+                    if r and r.request_id == 0)
+        s = req0.slot
+        P = len(prompt)
+        return {name: np.asarray(eng.cache[name][:, s, :P])
+                for name in ("k", "v", "pos")}
+
+    solo = prefill_cache(False)
+    busy = prefill_cache(True)
+    for name in ("k", "v"):
+        np.testing.assert_allclose(solo[name], busy[name],
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(solo["pos"], busy["pos"])
+
+
+def test_ssm_engine_decodes():
+    cfg = get_arch("falcon-mamba-7b").reduced()
+    eng = ServeEngine(cfg, max_batch=2, cache_len=64)
+    for r in _requests(3, seed=4):
+        eng.submit(r)
+    done = eng.run_until_drained()
+    assert len(done) == 3
