@@ -1,0 +1,117 @@
+"""Old-vs-new OTA aggregation data plane: per-tree Python loop vs the
+fused flat (K, M) pipeline.
+
+Sweeps cohort size K and model size M and reports wall time per round for
+
+- ``legacy``: ``ota.ota_aggregate_pertree`` — the seed implementation's
+  structure: an unjitted Python loop over clients x pytree leaves, three
+  materialized passes per client (quantize / dequantize / weighted add).
+- ``flat``:   ``ota.ota_aggregate_packed`` — pack once (excluded; clients
+  pack at the edge), then ONE jitted program: fused stochastic quantize +
+  superposition + AWGN epilogue.
+
+On CPU the flat path runs the XLA-fused jnp formulation of the kernel
+(interpret-mode Pallas is a correctness tool, not a perf path) — the
+"CPU-interpret-off jit path". On TPU it runs the Pallas kernel.
+
+Usage:  python benchmarks/bench_aggregation.py [--full] [--csv]
+``--full`` extends the sweep to M = 10M+ parameter models.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ota, packing
+
+# K sweep at fixed M, then M sweep at fixed K. (K, M) pairs.
+QUICK_SWEEP = [
+    (8, 1 << 20), (32, 1 << 20), (128, 1 << 20), (256, 1 << 20),
+    (32, 1 << 17),
+]
+FULL_EXTRA = [
+    (32, 10_000_000), (8, 16_000_000),
+]
+
+
+def _tree_of(M: int, seed: int, n_leaves: int = 6):
+    """Synthetic update pytree with n_leaves uneven leaves summing to ~M."""
+    rng = np.random.RandomState(seed)
+    sizes = [M // n_leaves] * (n_leaves - 1)
+    sizes.append(M - sum(sizes))
+    return {f"layer{j}": jnp.asarray(rng.randn(s).astype(np.float32) * 0.01)
+            for j, s in enumerate(sizes)}
+
+
+def _bits(K: int):
+    return [(4, 8, 8, 16, 32)[i % 5] for i in range(K)]
+
+
+def bench_pair(K: int, M: int, reps: int = 3, legacy_reps: int = 1,
+               legacy_cap_elems: float = 2e8):
+    """Returns (legacy_s, flat_s, speedup). legacy is skipped (nan) above
+    legacy_cap_elems K*M to keep the sweep finishable."""
+    ups = [_tree_of(M, seed=i) for i in range(K)]
+    bits = _bits(K)
+    weights = [1.0 + (i % 3) for i in range(K)]
+    cfg = ota.OTAConfig(snr_db=20.0)
+    layout = packing.make_layout(ups[0])
+    X = packing.pack_batch(ups, layout)
+    jax.block_until_ready(X)
+
+    # ---- new flat path (steady state: layout cached, program compiled)
+    key = jax.random.key(0)
+    out, _ = ota.ota_aggregate_packed(key, X, bits, weights, layout, cfg)
+    jax.block_until_ready(jax.tree.leaves(out))
+    t0 = time.perf_counter()
+    for r in range(reps):
+        out, _ = ota.ota_aggregate_packed(jax.random.key(r), X, bits,
+                                          weights, layout, cfg)
+    jax.block_until_ready(jax.tree.leaves(out))
+    flat_s = (time.perf_counter() - t0) / reps
+
+    # ---- legacy per-tree loop
+    if K * M > legacy_cap_elems:
+        return float("nan"), flat_s, float("nan")
+    out, _ = ota.ota_aggregate_pertree(key, ups, bits, weights, cfg)
+    jax.block_until_ready(jax.tree.leaves(out))
+    t0 = time.perf_counter()
+    for r in range(legacy_reps):
+        out, _ = ota.ota_aggregate_pertree(jax.random.key(r), ups, bits,
+                                           weights, cfg)
+    jax.block_until_ready(jax.tree.leaves(out))
+    legacy_s = (time.perf_counter() - t0) / legacy_reps
+    return legacy_s, flat_s, legacy_s / flat_s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="include 10M+ param configs")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+
+    sweep = QUICK_SWEEP + (FULL_EXTRA if args.full else [])
+    header = f"{'K':>4} {'M':>10} {'legacy_ms':>10} {'flat_ms':>9} {'speedup':>8}"
+    if args.csv:
+        print("K,M,legacy_ms,flat_ms,speedup")
+    else:
+        print(header)
+    rows = []
+    for K, M in sweep:
+        legacy_s, flat_s, speed = bench_pair(K, M)
+        rows.append((K, M, legacy_s, flat_s, speed))
+        if args.csv:
+            print(f"{K},{M},{legacy_s*1e3:.1f},{flat_s*1e3:.1f},{speed:.1f}")
+        else:
+            print(f"{K:>4} {M:>10} {legacy_s*1e3:>10.1f} {flat_s*1e3:>9.1f} "
+                  f"{speed:>7.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

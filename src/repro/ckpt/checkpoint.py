@@ -1,9 +1,15 @@
-"""Pytree checkpointing: msgpack + zstd, sharding-aware restore.
+"""Pytree checkpointing: msgpack + zstd (or zlib), sharding-aware restore.
 
-Format: a zstd-compressed msgpack document
+Format: a 1-byte codec flag followed by a compressed msgpack document
     {"tree": <structure with leaf placeholders>,
      "leaves": [{"dtype", "shape", "data"}...],
      "meta": {...user metadata...}}
+
+The flag byte selects the codec: ``Z`` = zstandard, ``z`` = zlib.
+``zstandard`` is an optional dependency — when the wheel is missing we
+fall back to stdlib zlib, so checkpointing works on a bare environment.
+Legacy flag-less files (raw zstd frames, magic ``0x28 B5 2F FD``) are
+still readable when zstandard is installed.
 
 Restore accepts an optional target sharding tree: each leaf is
 ``jax.device_put`` to its NamedSharding so a multi-host/multi-device
@@ -13,17 +19,47 @@ from __future__ import annotations
 
 import os
 import tempfile
+import zlib
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional wheel; zlib fallback below
+    zstandard = None
 
 Pytree = Any
 
 _LEAF = "__leaf__"
+
+_FLAG_ZSTD = b"Z"
+_FLAG_ZLIB = b"z"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"  # legacy flag-less files
+
+
+def _compress(doc: bytes, level: int) -> bytes:
+    if zstandard is not None:
+        return _FLAG_ZSTD + zstandard.ZstdCompressor(level=level).compress(doc)
+    # zstd levels go to 22, zlib's cap is 9 — clamp rather than reject
+    return _FLAG_ZLIB + zlib.compress(doc, min(level, 9))
+
+
+def _decompress(blob: bytes) -> bytes:
+    flag, payload = blob[:1], blob[1:]
+    if flag == _FLAG_ZLIB:
+        return zlib.decompress(payload)
+    if flag == _FLAG_ZSTD or blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstandard, which is not "
+                "installed; pip install zstandard to read it")
+        data = payload if flag == _FLAG_ZSTD else blob
+        return zstandard.ZstdDecompressor().decompress(data)
+    raise ValueError(f"unrecognised checkpoint codec flag {flag!r}")
 
 
 def _pack_tree(tree: Pytree):
@@ -74,7 +110,7 @@ def save_checkpoint(path: str, tree: Pytree,
     structure, leaves = _pack_tree(tree)
     doc = msgpack.packb({"tree": structure, "leaves": leaves,
                          "meta": meta or {}}, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=level).compress(doc)
+    comp = _compress(doc, level)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     # atomic write
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
@@ -91,8 +127,7 @@ def load_checkpoint(path: str, shardings: Optional[Pytree] = None):
     """Returns (tree, meta). With ``shardings``, leaves are device_put
     to the given NamedShardings as they are decoded."""
     with open(path, "rb") as f:
-        doc = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(f.read()),
-                              raw=False)
+        doc = msgpack.unpackb(_decompress(f.read()), raw=False)
     tree = _unpack_tree(doc["tree"], doc["leaves"])
     if shardings is not None:
         tree = jax.tree.map(

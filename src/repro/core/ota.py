@@ -14,21 +14,58 @@ Physical model (paper refs [1], [2]):
 - The server receives  sum_i alpha_i * dq(update_i)  + AWGN scaled by the
   receive SNR and the number of participating clients' aligned power.
 
+Data plane (flat pipeline)
+--------------------------
+
+The per-round hot path is one flat, batched, jitted program:
+
+1. **Pack** every client's update pytree into a padded flat f32 row via
+   ``core.packing`` (the FL server derives the layout once at init and
+   passes it down; the pytree entry point below derives it per call),
+   giving the ``(K, M)`` client-update matrix — the OTA superposition is a
+   reduction over its K axis, so cohort size never changes program shape
+   beyond K.
+2. **Fuse** stochastic quantize -> dequantize onto the shared analog grid
+   -> FedAvg-weighted superposition in ONE pass over (K, block) tiles
+   (``kernels/ota_fused.py`` on TPU; its jnp oracle
+   ``kernels/ref.ota_fused_ref`` on CPU, where interpret-mode Pallas is a
+   correctness tool, not a perf path). Each client uses a single
+   per-update quant scale — the faithful physical choice: one analog
+   constellation per client per round. The kernel is bits-agnostic
+   (precision enters as (K,) scale/qmax arrays), so one compiled program
+   serves every precision mix and the jit cache keys only on (K, M).
+3. **AWGN epilogue**: the noise std is calibrated to the *global*
+   aggregate norm (receive SNR), which only exists after the reduction,
+   so the O(M) noise axpy rides the same jitted program right after the
+   single O(K*M) pass (the kernel emits the running squared norm).
+4. **Unpack** the aggregate back to the update pytree (kept f32 for the
+   server optimizer).
+
+``ota_aggregate_pertree`` keeps the legacy per-client/per-leaf Python
+loop with identical semantics and PRNG stream — it is the reference
+oracle the flat path is equivalence-tested against (tests/test_ota.py),
+not a production path.
+
 TPU mapping (DESIGN.md §4): superposition is a reduction. In the
 distributed runtime the per-client updates live sharded across the mesh's
 ``data`` axis and the superposition lowers to a ``psum``/reduce-scatter;
-in the single-host FL simulator it is the stacked-sum below. The noise is
-injected *pre-reduction*, exactly where the channel adds it.
+in the single-host FL simulator it is the fused kernel above. The noise
+is injected post-reduction at the calibrated receive SNR, exactly where
+the channel adds it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import functools
+import os
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant
+from repro.core import packing, quant
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 Pytree = Any
 
@@ -50,61 +87,200 @@ def sample_channel(key, n_clients: int,
     return jnp.sqrt(h2), h2 >= fade_threshold
 
 
+def _use_kernel_default() -> bool:
+    """Pallas kernel on TPU; fused jnp reference everywhere else.
+
+    TPU only, not any accelerator: the kernel's sequential-grid
+    sum-of-squares accumulation is a TPU pattern (GPU grids run blocks in
+    parallel). On CPU, interpret-mode Pallas runs the kernel body per grid
+    step under the interpreter — orders of magnitude slower than the
+    XLA-fused jnp formulation with identical numerics.
+    REPRO_OTA_FORCE_KERNEL=1 forces the kernel anyway (interpret mode on
+    CPU), e.g. for equivalence testing.
+    """
+    forced = os.environ.get("REPRO_OTA_FORCE_KERNEL")
+    if forced is not None:
+        return forced.strip().lower() not in ("0", "false", "no", "off", "")
+    return jax.devices()[0].platform == "tpu"
+
+
+def _client_grid(bits: jnp.ndarray, amax: jnp.ndarray):
+    """Per-client analog grid: (scale, qmax) arrays from (bits, amax).
+
+    qmax == 0 marks an unquantized (bits >= 32) client; its scale is 1 and
+    the data plane passes its symbols through untouched.
+    """
+    bits = jnp.asarray(bits, jnp.int32)
+    qmax = jnp.where(bits < 32,
+                     jnp.exp2((bits - 1).astype(jnp.float32)) - 1.0, 0.0)
+    scale = jnp.where(qmax > 0,
+                      jnp.maximum(amax, 1e-12) / jnp.maximum(qmax, 1.0), 1.0)
+    return scale, qmax
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "n_valid", "use_kernel"))
+def ota_aggregate_flat(key, X: jnp.ndarray, bits: jnp.ndarray,
+                       weights: jnp.ndarray, *, cfg: OTAConfig,
+                       n_valid: int, use_kernel: bool = False):
+    """One-shot OTA aggregation of the flat (K, M) client-update matrix.
+
+    X rows are zero-padded packed updates (``core.packing``); ``n_valid``
+    is the real (unpadded) parameter count. bits/weights are (K,) arrays —
+    traced, not static, so the jit cache keys on (K, M, n_valid, cfg)
+    only. Returns (y (n_valid,) f32, habs, participate, noise_std).
+    """
+    K = X.shape[0]
+    X = X.astype(jnp.float32)
+    k_chan, k_quant, k_noise = jax.random.split(key, 3)
+    habs, participate = sample_channel(k_chan, K, cfg.fade_threshold)
+
+    w = jnp.asarray(weights, jnp.float32) * participate
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+
+    scale, qmax = _client_grid(bits, jnp.max(jnp.abs(X), axis=1))
+    sr_seed = jax.random.bits(k_quant, (), jnp.uint32)
+
+    if use_kernel:
+        acc, sumsq = kops.ota_quantize_superpose(X, scale, qmax, w, sr_seed)
+    else:
+        acc, sumsq = kref.ota_fused_ref(X, scale, qmax, w, sr_seed)
+
+    # receiver AWGN: noise std chosen so that per-element
+    # SNR = ||aggregate|| / ||noise|| matches cfg.snr_db. (Padding
+    # contributes exact zeros to both acc and sumsq.)
+    noise_std = jnp.sqrt(sumsq / n_valid * 10 ** (-cfg.snr_db / 10))
+    y = acc[:n_valid] + noise_std * jax.random.normal(k_noise, (n_valid,))
+    return y, habs, participate, noise_std
+
+
+def _info_dict(habs, participate, noise_std) -> Dict[str, Any]:
+    participate = jax.device_get(participate)
+    return {
+        "participation": [bool(p) for p in participate],
+        "n_participating": int(participate.sum()),
+        "noise_std": float(noise_std),
+        "channel_abs": [float(h) for h in jax.device_get(habs)],
+    }
+
+
+def ota_aggregate_packed(
+    key,
+    X: jnp.ndarray,
+    bits: Sequence[int],
+    weights: Sequence[float],
+    layout: packing.Layout,
+    cfg: OTAConfig = OTAConfig(),
+    *,
+    use_kernel: Optional[bool] = None,
+) -> Tuple[Pytree, Dict[str, Any]]:
+    """Aggregate pre-packed client rows; unpack the result per ``layout``.
+
+    The entry point for callers that already hold flat updates (the FL
+    server packs each client's delta exactly once, at the client).
+    """
+    if use_kernel is None:
+        use_kernel = _use_kernel_default()
+    y, habs, participate, noise_std = ota_aggregate_flat(
+        key, X, jnp.asarray(bits, jnp.int32),
+        jnp.asarray(weights, jnp.float32),
+        cfg=cfg, n_valid=layout.size, use_kernel=use_kernel)
+    agg = packing.unpack(y, layout, cast=False)
+    return agg, _info_dict(habs, participate, noise_std)
+
+
 def ota_aggregate(
     key,
     updates: Sequence[Pytree],
     bits: Sequence[int],
     weights: Sequence[float],
     cfg: OTAConfig = OTAConfig(),
+    *,
+    layout: Optional[packing.Layout] = None,
+    use_kernel: Optional[bool] = None,
 ) -> Tuple[Pytree, Dict[str, Any]]:
-    """Aggregate client updates over the simulated OTA channel.
+    """Aggregate client update pytrees over the simulated OTA channel.
 
     updates: per-client pytrees (same structure). bits: per-client precision.
     weights: FedAvg weights (sum need not be 1; renormalised over the
     participating set after fade truncation).
 
-    Returns (aggregated update, info dict with participation/noise stats).
+    Packs once into the (K, M) matrix and runs the fused flat pipeline
+    (module docstring). Returns (aggregated update pytree with f32 leaves,
+    info dict with participation/noise stats).
+    """
+    if layout is None:
+        layout = packing.make_layout(updates[0])
+    X = packing.pack_batch(updates, layout)
+    return ota_aggregate_packed(key, X, bits, weights, layout, cfg,
+                                use_kernel=use_kernel)
+
+
+def ota_aggregate_pertree(
+    key,
+    updates: Sequence[Pytree],
+    bits: Sequence[int],
+    weights: Sequence[float],
+    cfg: OTAConfig = OTAConfig(),
+) -> Tuple[Pytree, Dict[str, Any]]:
+    """Reference oracle: the legacy per-client/per-leaf Python loop.
+
+    Semantically identical to the flat path — same stochastic-rounding
+    dither (the positional hash of ``kernels.ota_fused.sr_dither``
+    evaluated over the flat layout and sliced per leaf), same receiver
+    noise draw, same shared per-update analog grid — but dispatched as
+    O(clients x leaves) unjitted ops. Kept for equivalence tests and as
+    the readable specification of the data plane; production goes through
+    ``ota_aggregate``.
     """
     n = len(updates)
+    layout = packing.make_layout(updates[0])
     k_chan, k_quant, k_noise = jax.random.split(key, 3)
     habs, participate = sample_channel(k_chan, n, cfg.fade_threshold)
-    participate_list = [bool(participate[i]) for i in range(n)]
 
     w = jnp.asarray(weights, jnp.float32) * participate
-    w_sum = jnp.maximum(jnp.sum(w), 1e-12)
-    w = w / w_sum
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
 
-    # client-side: quantize at the planned precision (stochastic rounding —
-    # unbiased so the OTA expectation is exact), then dequantise onto the
-    # shared analog grid.
-    qkeys = jax.random.split(k_quant, n)
+    from repro.kernels.ota_fused import sr_dither
+
+    sr_seed = jax.random.bits(k_quant, (), jnp.uint32)
+    positions = jnp.arange(layout.padded_size, dtype=jnp.uint32)
     leaves0, treedef = jax.tree.flatten(updates[0])
     agg_leaves = [jnp.zeros_like(l, jnp.float32) for l in leaves0]
     for i in range(n):
-        q_tree, s_tree = quant.quantize_tree(updates[i], int(bits[i]), key=qkeys[i])
-        dq = quant.dequantize_tree(q_tree, s_tree, int(bits[i]))
-        dq_leaves = jax.tree.leaves(dq)
+        leaves_i = jax.tree.leaves(updates[i])
+        b = int(bits[i])
+        if b >= 32:
+            dq_leaves = [l.astype(jnp.float32) for l in leaves_i]
+        else:
+            qmax = float(quant.qrange(b))
+            amax = jnp.max(jnp.stack(
+                [jnp.max(jnp.abs(l.astype(jnp.float32))) for l in leaves_i]))
+            scale = jnp.maximum(amax, 1e-12) / qmax
+            u_full = sr_dither(sr_seed, jnp.uint32(i), positions)
+            dq_leaves = []
+            for leaf, off, size, shape in zip(leaves_i, layout.offsets,
+                                              layout.sizes, layout.shapes):
+                u = jax.lax.slice_in_dim(u_full, off, off + size).reshape(shape)
+                scaled = leaf.astype(jnp.float32) / scale
+                floor = jnp.floor(scaled)
+                q = floor + (u < (scaled - floor)).astype(jnp.float32)
+                q = jnp.clip(q, -qmax, qmax)
+                dq_leaves.append(q * scale)
         wi = w[i]
         agg_leaves = [a + wi * l for a, l in zip(agg_leaves, dq_leaves)]
 
-    # receiver AWGN: noise std chosen so that per-element
-    # SNR = ||aggregate|| / ||noise|| matches cfg.snr_db.
-    total_elems = sum(l.size for l in agg_leaves)
-    agg_norm2 = sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in agg_leaves)
-    noise_power = agg_norm2 / total_elems * 10 ** (-cfg.snr_db / 10)
-    noise_std = jnp.sqrt(noise_power)
-    nkeys = jax.random.split(k_noise, len(agg_leaves))
+    total_elems = layout.size
+    agg_norm2 = sum(jnp.sum(l ** 2) for l in agg_leaves)
+    noise_std = jnp.sqrt(agg_norm2 / total_elems * 10 ** (-cfg.snr_db / 10))
+    n_full = jax.random.normal(k_noise, (total_elems,))
     noisy = [
-        a + noise_std * jax.random.normal(nk, a.shape)
-        for a, nk in zip(agg_leaves, nkeys)
+        a + noise_std * jax.lax.slice_in_dim(n_full, off, off + size).reshape(
+            a.shape)
+        for a, off, size in zip(agg_leaves, layout.offsets, layout.sizes)
     ]
-    info = {
-        "participation": participate_list,
-        "n_participating": int(jnp.sum(participate)),
-        "noise_std": float(noise_std),
-        "channel_abs": [float(habs[i]) for i in range(n)],
-    }
-    return jax.tree.unflatten(treedef, noisy), info
+    return jax.tree.unflatten(treedef, noisy), _info_dict(
+        habs, participate, noise_std)
 
 
 def channel_uses(bits: Sequence[int], n_params: int, cfg: OTAConfig = OTAConfig()) -> int:

@@ -1,0 +1,117 @@
+"""Pytree <-> flat-vector packing with a static, hashable ``Layout``.
+
+The MP-OTA-FL data plane works on a flat ``(K, M)`` client-update matrix:
+every client's update pytree is raveled into one padded f32 vector so the
+whole round — quantize, superpose, noise — is a single device program
+instead of an O(clients x leaves) dispatch storm. The same layout is the
+natural wire/storage format for checkpointing and serving weight pushes,
+so it lives in ``core`` rather than next to the OTA kernels.
+
+A ``Layout`` is derived once per tree structure (``make_layout``) and is
+fully static: treedef, per-leaf shapes/dtypes/offsets, and the padded
+total length (rounded up to a lane-block multiple so packed vectors drop
+straight into the Pallas kernels without re-padding). ``Layout`` is
+hashable, so jitted functions can take it as a static argument and the
+jit cache keys on the layout identity.
+
+The flat vector is f32: every leaf round-trips through float32, so
+integer leaves are exact only up to the 24-bit mantissa (|v| <= 2^24).
+Fine for update/weight trees (the data plane) and f32/bf16 params;
+trees carrying large integer state (step counters, RNG keys) need a
+side channel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+# Matches kernels.ota_fused.BLOCK_COLS: packed vectors tile evenly into the
+# fused aggregation kernel's (K, block) grid with no second padding pass.
+DEFAULT_BLOCK = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Static description of a pytree's flat packing.
+
+    offsets[i] is leaf i's start in the flat vector; ``size`` is the real
+    (unpadded) element count and ``padded_size`` the lane-aligned length.
+    Frozen + all-hashable fields => usable as a jit static argument.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    sizes: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+    size: int
+    padded_size: int
+    block: int
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.shapes)
+
+    @property
+    def padding(self) -> int:
+        return self.padded_size - self.size
+
+
+def make_layout(tree: Pytree, block: int = DEFAULT_BLOCK) -> Layout:
+    """Derive the static flat layout of ``tree`` (leaf order = treedef order)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes, dtypes, sizes, offsets = [], [], [], []
+    off = 0
+    for leaf in leaves:
+        leaf = jnp.asarray(leaf)
+        shapes.append(tuple(int(d) for d in leaf.shape))
+        dtypes.append(jnp.dtype(leaf.dtype).name)
+        n = int(leaf.size)
+        sizes.append(n)
+        offsets.append(off)
+        off += n
+    padded = -(-max(off, 1) // block) * block
+    return Layout(
+        treedef=treedef,
+        shapes=tuple(shapes),
+        dtypes=tuple(dtypes),
+        sizes=tuple(sizes),
+        offsets=tuple(offsets),
+        size=off,
+        padded_size=padded,
+        block=block,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("layout",))
+def pack(tree: Pytree, layout: Layout) -> jnp.ndarray:
+    """Ravel + concat + zero-pad ``tree`` into a ``(padded_size,)`` f32 vector."""
+    leaves = jax.tree.leaves(tree)
+    assert len(leaves) == layout.n_leaves, (len(leaves), layout.n_leaves)
+    flat = [jnp.asarray(l).astype(jnp.float32).reshape(-1) for l in leaves]
+    if layout.padding:  # padded_size >= block, so an empty tree is all pad
+        flat.append(jnp.zeros((layout.padding,), jnp.float32))
+    return jnp.concatenate(flat)
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "cast"))
+def unpack(flat: jnp.ndarray, layout: Layout, *, cast: bool = True) -> Pytree:
+    """Inverse of ``pack``. ``cast=False`` keeps every leaf f32 (the OTA
+    aggregation path hands f32 aggregates to the server optimizer)."""
+    leaves = []
+    for shape, dtype, off, size in zip(layout.shapes, layout.dtypes,
+                                       layout.offsets, layout.sizes):
+        leaf = jax.lax.slice_in_dim(flat, off, off + size).reshape(shape)
+        leaves.append(leaf.astype(dtype) if cast else leaf)
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+def pack_batch(trees: Sequence[Pytree], layout: Layout) -> jnp.ndarray:
+    """Stack K packed client updates into the ``(K, padded_size)`` matrix."""
+    return jnp.stack([pack(t, layout) for t in trees])

@@ -3,7 +3,11 @@
 A client owns a simulated user (ground truth), a device spec, and a data
 shard. ``local_update`` runs local SGD steps with the model fake-quantized
 to the planned bits (STE gradients) and returns the parameter delta — the
-thing the OTA channel superposes.
+thing the OTA channel superposes. With a ``layout`` the delta is returned
+already flat-packed (``core.packing``): the client is the one that
+modulates its update onto the analog symbol stream, so the pytree never
+crosses the client/server boundary and the server stacks rows straight
+into the (K, M) aggregation matrix.
 """
 from __future__ import annotations
 
@@ -16,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import packing
 from repro.core.profiling.hardware import DeviceSpec
 from repro.core.profiling.users import UserTruth
 from repro.data.voice import ClientShard, batchify
@@ -52,9 +57,14 @@ class FLClient:
         self, global_params: Pytree, bits: int, *,
         local_steps: int = 4, local_batch: int = 8, lr: float = 5e-4,
         seed: int = 0, max_frames: int = 320, max_labels: int = 40,
-        fedprox_mu: float = 0.0,
+        fedprox_mu: float = 0.0, layout: Optional[packing.Layout] = None,
     ) -> Tuple[Pytree, Dict[str, float]]:
-        """Run local steps; return (delta, metrics)."""
+        """Run local steps; return (delta, metrics).
+
+        With ``layout``, delta is the flat-packed (padded_size,) f32 row
+        ready to stack into the OTA aggregation matrix; otherwise the
+        parameter-delta pytree (legacy shape).
+        """
         jitted, opt = self._step_fn(bits, lr, fedprox_mu)
         state = {"params": global_params, "opt": opt.init(global_params),
                  "step": jnp.zeros((), jnp.int32)}
@@ -74,5 +84,7 @@ class FLClient:
             lambda new, old: (new.astype(jnp.float32)
                               - old.astype(jnp.float32)),
             state["params"], global_params)
+        if layout is not None:
+            delta = packing.pack(delta, layout)
         return delta, {"loss_first": losses[0], "loss_last": losses[-1],
                        "n_samples": len(utts)}

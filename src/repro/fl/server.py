@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, FLConfig, get_arch
-from repro.core import ota
+from repro.core import ota, packing
 from repro.core.profiling.hardware import DeviceSpec, make_fleet
 from repro.core.profiling.planner import (BasePlanner, PlanDecision,
                                           RAGPlanner, UnifiedTierPlanner,
@@ -68,6 +68,9 @@ class FLServer:
         ]
         self.planner = make_planner(fl_cfg)
         self.params = self.model.init(jax.random.key(fl_cfg.seed))
+        # one flat layout for the whole federation: clients pack their
+        # deltas onto it, the OTA data plane aggregates rows (core/ota.py)
+        self.layout = packing.make_layout(self.params)
         self.round_logs: List[RoundLog] = []
         self._rng = np.random.RandomState(fl_cfg.seed + 7)
 
@@ -109,7 +112,7 @@ class FLServer:
                 local_steps=self.cfg.local_steps,
                 local_batch=self.cfg.local_batch,
                 lr=self.cfg.lr, seed=self.cfg.seed * 97 + rnd,
-                fedprox_mu=self.cfg.fedprox_mu)
+                fedprox_mu=self.cfg.fedprox_mu, layout=self.layout)
             deltas.append(delta)
             # FedAvg weight = samples x estimated contribution C_q (the
             # strategy's lever: class-equal upweights minority-rich
@@ -128,11 +131,13 @@ class FLServer:
             self.round_logs.append(log)
             return log
 
-        # ---- mixed-precision OTA aggregation
-        agg, info = ota.ota_aggregate(
+        # ---- mixed-precision OTA aggregation: stack the clients' packed
+        # rows into the (K, M) matrix and run the fused flat data plane
+        agg, info = ota.ota_aggregate_packed(
             jax.random.key(self.cfg.seed * 131 + rnd),
-            deltas, [bits[self.users[i].user_id] for i in active_ids],
-            weights, ota.OTAConfig(snr_db=self.cfg.snr_db))
+            jnp.stack(deltas),
+            [bits[self.users[i].user_id] for i in active_ids],
+            weights, self.layout, ota.OTAConfig(snr_db=self.cfg.snr_db))
         # server momentum (FedAvgM) on the aggregated update
         if self.cfg.server_momentum > 0.0:
             if not hasattr(self, "_velocity"):

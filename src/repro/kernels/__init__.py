@@ -1,3 +1,4 @@
 from repro.kernels.ops import (  # noqa: F401
-    fake_quant, flash_mha, ota_aggregate, qmatmul, quantize_weights,
+    fake_quant, flash_mha, ota_aggregate, ota_quantize_superpose, qmatmul,
+    quantize_weights,
 )

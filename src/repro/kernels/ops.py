@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.quant import qrange
 from repro.kernels import ota_aggregate as _ota
+from repro.kernels import ota_fused as _otaf
 from repro.kernels import qmatmul as _qmm
 from repro.kernels import quantize as _q
 
@@ -67,6 +68,29 @@ def ota_aggregate(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
     out = _ota.ota_aggregate_2d(xp, w, np_, jnp.asarray(noise_std),
                                 interpret=interpret)
     return out[:M]
+
+
+@jax.jit
+def ota_quantize_superpose(x: jnp.ndarray, scale: jnp.ndarray,
+                           qmax: jnp.ndarray, w: jnp.ndarray,
+                           seed: jnp.ndarray):
+    """Fused per-client stochastic quantize -> dequant -> weighted superpose.
+
+    x: (K, M); scale/qmax/w: (K,) (qmax == 0 => fp32 passthrough row);
+    seed: () uint32 driving the in-kernel positional rounding dither.
+    Returns (acc (M,) f32, sumsq () f32). One streaming pass on TPU; the
+    jnp oracle with identical semantics is ``ref.ota_fused_ref``.
+
+    Interpret mode everywhere but TPU: the kernel's cross-grid-step
+    sumsq accumulation relies on TPU sequential-grid semantics and would
+    race under a parallel (GPU) grid.
+    """
+    interpret = jax.devices()[0].platform != "tpu"
+    M = x.shape[1]
+    xp, _ = _pad_to(x, _otaf.BLOCK_COLS, axis=1)
+    acc, ss = _otaf.ota_fused_2d(xp, scale, qmax, w, jnp.asarray(seed),
+                                 interpret=interpret)
+    return acc[:M], ss.reshape(())
 
 
 @jax.jit

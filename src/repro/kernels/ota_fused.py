@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused mixed-precision OTA data plane.
+
+One pass over the flat ``(K, M)`` client-update matrix does the whole
+per-round hot loop that ``core/ota.py`` used to run as three materialized
+stages per client (quantize -> dequantize -> weighted add):
+
+    for each (K, BLOCK_COLS) tile:
+        u_k   = dither(seed, client, position)            (computed, not read)
+        q_k   = clip(floor(x_k / s_k) + (u_k < frac), -qmax_k, qmax_k)
+        dq_k  = q_k * s_k                (or x_k when qmax_k == 0: fp32 client)
+        acc   = sum_k w_k * dq_k         (VPU K-step FMA)
+        out  += acc;  sumsq += |acc|^2   (running scalar for the AWGN power)
+
+Per-client scalars — quant scale ``s_k``, symmetric range ``qmax_k``, and
+FedAvg/channel weight ``w_k`` — ride along as (K, 1) blocks resident for
+every grid step; the parameter axis streams through VMEM, so HBM traffic
+is one read of x plus one write of the aggregate. The kernel is
+bits-agnostic: precision enters only through the qmax/scale arrays, so
+one compiled program serves every precision mix.
+
+Stochastic-rounding dither: a counter-based positional hash
+(``sr_dither``: murmur3 finalizer over seed/client/position) generated
+*inside* the kernel. The dither needs avalanche, not cryptographic
+strength — on CPU a threefry draw of the same (K, M) uniforms costs ~3x
+the entire fused math, and as a kernel input it would double the HBM read
+traffic. Being a pure function of (seed, client, position), the jnp
+oracle (``ref.ota_fused_ref``) and the per-tree reference
+(``core/ota.ota_aggregate_pertree``) reproduce the exact same numbers.
+
+The receiver AWGN rides the epilogue in ``core/ota.py`` rather than this
+kernel: its std is defined by the *global* aggregate norm (SNR relative to
+the received signal), which only exists after the reduction. The kernel
+therefore emits the blockwise sum-of-squares as a second (1, 1) output —
+accumulated across the sequential TPU grid — so the O(M) noise axpy is the
+only work left outside the single O(K*M) pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_COLS = 2048
+LANES = 128
+
+_GOLDEN = 0x9E3779B9  # Weyl increment decorrelating client rows
+
+
+def sr_dither(seed, rows, pos) -> jnp.ndarray:
+    """Positional uniform dither u in [0, 1) for stochastic rounding.
+
+    murmur3 finalizer (SplitMix-style counter hash) of
+    ``pos ^ (seed + GOLDEN * row)`` — ~6 elementwise int ops per element.
+    seed/rows/pos: uint32 arrays (broadcastable). 24-bit mantissa-exact
+    output, strictly below 1 so integer inputs never round away.
+    """
+    seed = seed.astype(jnp.uint32)
+    rows = rows.astype(jnp.uint32)
+    pos = pos.astype(jnp.uint32)
+    h = pos ^ (seed + jnp.uint32(_GOLDEN) * rows)
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(
+        1.0 / (1 << 24))
+
+
+def _fused_kernel(seed_ref, scale_ref, qmax_ref, w_ref, x_ref, o_ref, ss_ref):
+    i = pl.program_id(0)
+    K, B = x_ref.shape
+    x = x_ref[...].astype(jnp.float32)          # (K, B)
+    scale = scale_ref[...].astype(jnp.float32)  # (K, 1)
+    qmax = qmax_ref[...].astype(jnp.float32)    # (K, 1); 0 => passthrough
+    w = w_ref[...].astype(jnp.float32)          # (K, 1)
+
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (K, B), 0)
+    pos = jax.lax.broadcasted_iota(jnp.uint32, (K, B), 1) + \
+        i.astype(jnp.uint32) * jnp.uint32(B)
+    u = sr_dither(seed_ref[0, 0], rows, pos)
+
+    scaled = x / scale
+    floor = jnp.floor(scaled)
+    q = floor + (u < (scaled - floor)).astype(jnp.float32)
+    q = jnp.clip(q, -qmax, qmax)
+    dq = jnp.where(qmax > 0, q * scale, x)
+    acc = jnp.sum(dq * w, axis=0)               # (B,)
+    o_ref[...] = acc.reshape(o_ref.shape)
+
+    @pl.when(i == 0)
+    def _init():
+        ss_ref[0, 0] = 0.0
+
+    ss_ref[0, 0] += jnp.sum(acc * acc)
+
+
+def ota_fused_2d(x: jnp.ndarray, scale: jnp.ndarray, qmax: jnp.ndarray,
+                 w: jnp.ndarray, seed: jnp.ndarray, *,
+                 interpret: bool = False):
+    """x: (K, M) with M % BLOCK_COLS == 0; scale/qmax/w: (K,); seed: ().
+
+    Returns (acc (M,) f32, sumsq (1, 1) f32) — the pre-noise aggregate and
+    its squared norm.
+    """
+    K, M = x.shape
+    assert M % BLOCK_COLS == 0, M
+    grid = (M // BLOCK_COLS,)
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    col = pl.BlockSpec((K, 1), lambda i: (0, 0))
+    tile = pl.BlockSpec((K, BLOCK_COLS), lambda i: (0, i))
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[scalar, col, col, col, tile],
+        out_specs=[
+            pl.BlockSpec((BLOCK_COLS,), lambda i: (i,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M,), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seed.reshape(1, 1).astype(jnp.uint32),
+      scale.reshape(K, 1).astype(jnp.float32),
+      qmax.reshape(K, 1).astype(jnp.float32),
+      w.reshape(K, 1).astype(jnp.float32),
+      x)

@@ -30,6 +30,36 @@ def fake_quant_ref(x: jnp.ndarray, scale: jnp.ndarray, bits: int,
     return q * scale
 
 
+def ota_fused_ref(x: jnp.ndarray, scale: jnp.ndarray, qmax: jnp.ndarray,
+                  w: jnp.ndarray, seed: jnp.ndarray):
+    """Oracle for the fused OTA data-plane kernel (see ota_fused.py).
+
+    x: (K, M); scale/qmax/w: (K,); seed: () uint32 for the positional
+    stochastic-rounding dither. qmax == 0 marks an unquantized (fp32,
+    bits >= 32) client. Returns (acc (M,), sumsq () f32): the
+    stochastic-quantize -> dequantize -> weighted superposition of the K
+    client streams, plus the aggregate's squared norm (the AWGN power
+    calibration input).
+    """
+    from repro.kernels.ota_fused import sr_dither
+
+    K, M = x.shape
+    x = x.astype(jnp.float32)
+    scale = scale.reshape(-1, 1).astype(jnp.float32)
+    qmax = qmax.reshape(-1, 1).astype(jnp.float32)
+    w = w.reshape(-1, 1).astype(jnp.float32)
+    u = sr_dither(jnp.asarray(seed),
+                  jax.lax.broadcasted_iota(jnp.uint32, (K, M), 0),
+                  jax.lax.broadcasted_iota(jnp.uint32, (K, M), 1))
+    scaled = x / scale
+    floor = jnp.floor(scaled)
+    q = floor + (u < (scaled - floor)).astype(jnp.float32)
+    q = jnp.clip(q, -qmax, qmax)
+    dq = jnp.where(qmax > 0, q * scale, x)
+    acc = jnp.sum(dq * w, axis=0)
+    return acc, jnp.sum(acc * acc)
+
+
 def ota_aggregate_ref(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
                       noise_std: jnp.ndarray) -> jnp.ndarray:
     """Superpose K client streams: sum_k w_k x_k + noise_std * noise.

@@ -249,67 +249,70 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         "multi_pod": multi_pod,
     }
 
-    jax.set_mesh(mesh)
-    try:
-        # ---- the deliverable: full production config lowers + compiles
-        t0 = time.time()
-        lowered, extra = _lower_combo(cfg, shape, mesh)
-        record.update(extra)
-        record["lower_s"] = round(time.time() - t0, 2)
-        main = _compile_costs(lowered)
-        record.update(main)
-        record["status"] = "ok"
+    from repro.util import use_mesh
 
-        # ---- analytic reference
-        n_params = sum(x.size for x in jax.tree.leaves(
-            jax.eval_shape(model.init, jax.random.key(0))))
-        n_act = active_params(cfg, n_params)
-        record["n_params"] = int(n_params)
-        record["n_active_params"] = int(n_act)
-        record["model_flops"] = model_flops(cfg, shape, n_params, n_act)
+    # jax.set_mesh on new jax, `with mesh:` on 0.4.x
+    with use_mesh(mesh):
+        try:
+            # ---- the deliverable: full production config lowers + compiles
+            t0 = time.time()
+            lowered, extra = _lower_combo(cfg, shape, mesh)
+            record.update(extra)
+            record["lower_s"] = round(time.time() - t0, 2)
+            main = _compile_costs(lowered)
+            record.update(main)
+            record["status"] = "ok"
 
-        # ---- cost calibration: scans hide per-layer cost from XLA's
-        # analysis, so extrapolate true depth from unrolled 1/2-unit runs.
-        flops = main["flops"] or 0.0
-        byts = main["bytes_accessed"] or 0.0
-        coll = main["collectives"]
-        if calibrate:
-            try:
-                cfg1, cfg2, units = _calib_cfgs(cfg)
-                l1, _ = _lower_combo(cfg1, shape, mesh)
-                c1 = _compile_costs(l1)
-                l2, _ = _lower_combo(cfg2, shape, mesh)
-                c2 = _compile_costs(l2)
-                ext = _extrapolate(c1, c2, units)
-                record["calibrated"] = True
-                record["calib_units"] = units
-                record["calib_compile_s"] = c1["compile_s"] + c2["compile_s"]
-                flops = ext["flops"]
-                byts = ext["bytes_accessed"]
-                coll = ext["collectives"]
-                record["flops_extrap"] = flops
-                record["bytes_extrap"] = byts
-                record["collectives_extrap"] = coll
-            except Exception as e:  # noqa: BLE001
-                record["calibrated"] = False
-                record["calib_error"] = f"{type(e).__name__}: {e}"[:300]
+            # ---- analytic reference
+            n_params = sum(x.size for x in jax.tree.leaves(
+                jax.eval_shape(model.init, jax.random.key(0))))
+            n_act = active_params(cfg, n_params)
+            record["n_params"] = int(n_params)
+            record["n_active_params"] = int(n_act)
+            record["model_flops"] = model_flops(cfg, shape, n_params, n_act)
 
-        coll_total = sum(v for k, v in coll.items() if k != "counts")
-        record["collective_bytes_total"] = coll_total
-        # cost_analysis FLOPs/bytes are per-device-program (SPMD), i.e.
-        # one chip's slice — roofline terms are per chip directly.
-        record["t_compute_s"] = flops / PEAK_FLOPS_BF16
-        record["t_memory_s"] = byts / HBM_BW
-        record["t_collective_s"] = coll_total / ICI_BW
-        terms = {"compute": record["t_compute_s"],
-                 "memory": record["t_memory_s"],
-                 "collective": record["t_collective_s"]}
-        record["bottleneck"] = max(terms, key=terms.get)
-        return record
-    except Exception as e:  # noqa: BLE001 — we want the failure in the table
-        record["status"] = "error"
-        record["error"] = f"{type(e).__name__}: {e}"[:500]
-        return record
+            # ---- cost calibration: scans hide per-layer cost from XLA's
+            # analysis, so extrapolate true depth from unrolled 1/2-unit runs.
+            flops = main["flops"] or 0.0
+            byts = main["bytes_accessed"] or 0.0
+            coll = main["collectives"]
+            if calibrate:
+                try:
+                    cfg1, cfg2, units = _calib_cfgs(cfg)
+                    l1, _ = _lower_combo(cfg1, shape, mesh)
+                    c1 = _compile_costs(l1)
+                    l2, _ = _lower_combo(cfg2, shape, mesh)
+                    c2 = _compile_costs(l2)
+                    ext = _extrapolate(c1, c2, units)
+                    record["calibrated"] = True
+                    record["calib_units"] = units
+                    record["calib_compile_s"] = c1["compile_s"] + c2["compile_s"]
+                    flops = ext["flops"]
+                    byts = ext["bytes_accessed"]
+                    coll = ext["collectives"]
+                    record["flops_extrap"] = flops
+                    record["bytes_extrap"] = byts
+                    record["collectives_extrap"] = coll
+                except Exception as e:  # noqa: BLE001
+                    record["calibrated"] = False
+                    record["calib_error"] = f"{type(e).__name__}: {e}"[:300]
+
+            coll_total = sum(v for k, v in coll.items() if k != "counts")
+            record["collective_bytes_total"] = coll_total
+            # cost_analysis FLOPs/bytes are per-device-program (SPMD), i.e.
+            # one chip's slice — roofline terms are per chip directly.
+            record["t_compute_s"] = flops / PEAK_FLOPS_BF16
+            record["t_memory_s"] = byts / HBM_BW
+            record["t_collective_s"] = coll_total / ICI_BW
+            terms = {"compute": record["t_compute_s"],
+                     "memory": record["t_memory_s"],
+                     "collective": record["t_collective_s"]}
+            record["bottleneck"] = max(terms, key=terms.get)
+            return record
+        except Exception as e:  # noqa: BLE001 — we want the failure in the table
+            record["status"] = "error"
+            record["error"] = f"{type(e).__name__}: {e}"[:500]
+            return record
 
 
 LONG_SKIP: Dict[str, str] = {}  # all archs lower for long_500k (window cache)

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.util import constrain
+from repro.util import constrain, get_abstract_mesh
 
 Params = Dict[str, Any]
 
@@ -522,7 +522,7 @@ def _moe_math_local(xf, p, E: int, K: int, cap_factor: float):
 
 
 def _mesh_info():
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh.empty:
         return None
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
@@ -621,7 +621,7 @@ def moe_block(
         out = weighted.reshape(T_loc, K, d).sum(axis=1).astype(xf.dtype)
         return out, aux
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     from jax.experimental.shard_map import shard_map
 
     dp_entry = dp_axes if len(dp_axes) > 1 else dp_axes[0]

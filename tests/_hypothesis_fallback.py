@@ -1,0 +1,93 @@
+"""Tiny stand-in for ``hypothesis`` on bare environments.
+
+The tier-1 suite must *collect and run* without the hypothesis wheel
+(the container only bakes in the jax toolchain). This module implements
+just the surface the tests use — ``given``/``settings`` and the
+``integers``/``floats``/``sampled_from``/``composite`` strategies — as a
+deterministic seeded sampler: each ``@given`` test runs ``max_examples``
+times with pseudo-random draws. No shrinking, no database; coverage is
+weaker than real hypothesis but the properties still get exercised.
+
+Usage in a test module::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, sample_fn):
+        self._sample_fn = sample_fn
+
+    def sample(self, rng: random.Random):
+        return self._sample_fn(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value, **_):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def composite(fn):
+        """``fn(draw, *args, **kwargs)`` -> strategy factory, like hypothesis."""
+
+        def build(*args, **kwargs):
+            def sample(rng):
+                return fn(lambda strat: strat.sample(rng), *args, **kwargs)
+
+            return _Strategy(sample)
+
+        return build
+
+
+st = _Strategies()
+strategies = st
+
+_DEFAULT_EXAMPLES = 10
+
+
+def given(*strats):
+    def deco(test):
+        # NB: no functools.wraps — pytest would introspect the wrapped
+        # signature via __wrapped__ and demand fixtures for the strategy
+        # arguments. The runner takes no arguments at all.
+        def runner():
+            n = getattr(runner, "_max_examples", _DEFAULT_EXAMPLES)
+            # deterministic per-test stream (independent of PYTHONHASHSEED)
+            rng = random.Random(zlib.adler32(test.__name__.encode()))
+            for _ in range(n):
+                test(*[s.sample(rng) for s in strats])
+
+        runner.__name__ = test.__name__
+        runner.__module__ = test.__module__
+        runner.__doc__ = test.__doc__
+        runner.hypothesis_fallback = True
+        return runner
+
+    return deco
+
+
+def settings(deadline=None, max_examples=_DEFAULT_EXAMPLES, **_):
+    """Applied outside @given; only max_examples is honoured."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco

@@ -38,10 +38,11 @@ def test_shard_map_moe_matches_local():
         x = jax.random.normal(jax.random.key(2), (4, 16, cfg.d_model)) * 0.5
         moe_p = jax.tree.map(lambda a: a[0], params["layers"]["moe"])
         out_ref, _ = moe_block(moe_p, x, cfg)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        jax.set_mesh(mesh)
-        out_sm, _ = jax.jit(lambda p_, x_: moe_block(p_, x_, cfg))(moe_p, x)
+        from repro.launch.mesh import make_mesh
+        from repro.util import use_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
+        with use_mesh(mesh):
+            out_sm, _ = jax.jit(lambda p_, x_: moe_block(p_, x_, cfg))(moe_p, x)
         err = float(jnp.abs(out_ref - out_sm).max())
         assert err < 1e-5, err
         print("moe shard_map equivalence ok", err)
@@ -68,9 +69,9 @@ def test_sharded_train_step_runs_and_matches_single_device():
             state, batch)
         ref_loss = float(ref_metrics["loss"])
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        jax.set_mesh(mesh)
+        from repro.launch.mesh import make_mesh
+        from repro.util import use_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         state_shapes = jax.eval_shape(lambda: state)
         state_specs = {
             "params": shd.tree_param_specs(state_shapes["params"], mesh,
@@ -82,13 +83,14 @@ def test_sharded_train_step_runs_and_matches_single_device():
         batch_specs = shd.batch_spec(
             {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
              for k, v in batch.items()}, mesh)
-        jitted = jax.jit(make_train_step(model, opt),
-                         in_shardings=(shd.to_named(state_specs, mesh),
-                                       shd.to_named(batch_specs, mesh)))
-        state2 = jax.device_put(state, shd.to_named(state_specs, mesh))
-        batch2 = jax.device_put(batch, shd.to_named(batch_specs, mesh))
-        new_state, metrics = jitted(state2, batch2)
-        loss = float(metrics["loss"])
+        with use_mesh(mesh):
+            jitted = jax.jit(make_train_step(model, opt),
+                             in_shardings=(shd.to_named(state_specs, mesh),
+                                           shd.to_named(batch_specs, mesh)))
+            state2 = jax.device_put(state, shd.to_named(state_specs, mesh))
+            batch2 = jax.device_put(batch, shd.to_named(batch_specs, mesh))
+            new_state, metrics = jitted(state2, batch2)
+            loss = float(metrics["loss"])
         assert abs(loss - ref_loss) < 1e-2, (loss, ref_loss)
         # params agree between single-device and sharded step
         diff = jax.tree.map(
@@ -103,18 +105,18 @@ def test_constrain_filters_indivisible_dims():
     print(_run("""
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
-        from repro.util import constrain
+        from repro.launch.mesh import make_mesh
+        from repro.util import constrain, use_mesh
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        jax.set_mesh(mesh)
+        mesh = make_mesh((2, 4), ("data", "model"))
 
         @jax.jit
         def f(x):
             # 7 doesn't divide 4 -> model entry must be dropped, not crash
             return constrain(x, P("data", "model")) * 2
 
-        out = f(jnp.ones((8, 7)))
+        with use_mesh(mesh):
+            out = f(jnp.ones((8, 7)))
         assert out.shape == (8, 7)
         print("constrain divisibility guard ok")
     """))

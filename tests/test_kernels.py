@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic fallback sampler
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.quant import qrange
 from repro.kernels import ops, ref
@@ -59,6 +62,27 @@ def test_ota_kernel_matches_ref(k, m, seed):
     got = ops.ota_aggregate(x, w, noise, std)
     want = ref.ota_aggregate_ref(x, w, noise, std)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.integers(1, 10), st.integers(10, 5000), st.integers(0, 2 ** 16))
+def test_ota_fused_kernel_matches_ref(k, m, seed):
+    """Fused quantize+superpose kernel (interpret) == jnp oracle, incl.
+    the in-kernel positional dither and the sum-of-squares output."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(k, m).astype(np.float32))
+    bits = rng.choice([4, 8, 16, 32], size=k)
+    qmax = jnp.asarray(np.where(bits < 32, 2.0 ** (bits - 1) - 1, 0.0),
+                       jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.where(qmax > 0, jnp.maximum(amax, 1e-12)
+                      / jnp.maximum(qmax, 1.0), 1.0)
+    w = jnp.asarray(rng.uniform(0, 1, k).astype(np.float32))
+    sr_seed = jnp.uint32(rng.randint(0, 2 ** 31))
+    got_acc, got_ss = ops.ota_quantize_superpose(x, scale, qmax, w, sr_seed)
+    want_acc, want_ss = ref.ota_fused_ref(x, scale, qmax, w, sr_seed)
+    np.testing.assert_allclose(got_acc, want_acc, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(float(got_ss), float(want_ss), rtol=1e-5)
 
 
 @settings(deadline=None, max_examples=8)

@@ -67,6 +67,86 @@ def test_mixed_precision_unbiased_expectation():
     assert err < 0.15, err
 
 
+def _mixed_updates(n, seed=7):
+    rng = np.random.RandomState(seed)
+    return [{"w": jnp.asarray(rng.randn(40, 13).astype(np.float32)),
+             "b": [jnp.asarray(rng.randn(77).astype(np.float32)),
+                   jnp.asarray(rng.randn(3, 5, 2).astype(np.float32))]}
+            for _ in range(n)]
+
+
+def test_flat_path_matches_pertree_oracle():
+    """The fused flat pipeline == the legacy per-tree loop, same keys."""
+    ups = _mixed_updates(6)
+    bits = [4, 8, 16, 32, 8, 4]
+    weights = [1.0, 2.0, 0.5, 1.0, 3.0, 1.5]
+    for snr in (80.0, 15.0):
+        cfg = ota.OTAConfig(snr_db=snr)
+        key = jax.random.key(123)
+        flat, info_f = ota.ota_aggregate(key, ups, bits, weights, cfg)
+        tree, info_t = ota.ota_aggregate_pertree(key, ups, bits, weights, cfg)
+        assert jax.tree.structure(flat) == jax.tree.structure(tree)
+        for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(tree)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5)
+        assert info_f["participation"] == info_t["participation"]
+        assert abs(info_f["noise_std"] - info_t["noise_std"]) < 1e-6
+
+
+def test_fused_kernel_matches_jnp_reference_path():
+    """interpret-mode Pallas kernel == the fused jnp reference, bit-for-bit
+    semantics (same uniforms, same grid)."""
+    ups = _mixed_updates(5, seed=11)
+    bits = [4, 16, 8, 32, 4]
+    weights = [1.0] * 5
+    key = jax.random.key(9)
+    cfg = ota.OTAConfig(snr_db=30.0)
+    a_jnp, _ = ota.ota_aggregate(key, ups, bits, weights, cfg,
+                                 use_kernel=False)
+    a_ker, _ = ota.ota_aggregate(key, ups, bits, weights, cfg,
+                                 use_kernel=True)
+    for a, b in zip(jax.tree.leaves(a_jnp), jax.tree.leaves(a_ker)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_flat_stochastic_rounding_unbiased_over_keys():
+    """E[aggregate] -> true weighted mean as rounds accumulate (the OTA
+    guarantee stochastic rounding buys)."""
+    ups = _mixed_updates(3, seed=3)
+    weights = [1.0, 1.0, 1.0]
+    cfg = ota.OTAConfig(snr_db=70.0, fade_threshold=0.0)
+    R = 64
+    acc = None
+    for i in range(R):
+        agg, _ = ota.ota_aggregate(jax.random.key(5000 + i), ups,
+                                   [4, 4, 8], weights, cfg)
+        flat = jnp.concatenate([l.reshape(-1) for l in jax.tree.leaves(agg)])
+        acc = flat / R if acc is None else acc + flat / R
+    want = np.mean([np.concatenate(
+        [np.asarray(l).reshape(-1) for l in jax.tree.leaves(u)])
+        for u in ups], axis=0)
+    # 4-bit shared-grid scale ~ amax/7; mean-of-R rounding noise ~ scale/2/sqrt(R)
+    err = float(jnp.abs(acc - want).max())
+    assert err < 0.12, err
+
+
+def test_packed_entrypoint_matches_pytree_entrypoint():
+    from repro.core import packing
+
+    ups = _mixed_updates(4, seed=19)
+    bits = [8, 8, 4, 16]
+    weights = [1.0, 0.5, 2.0, 1.0]
+    lay = packing.make_layout(ups[0])
+    X = packing.pack_batch(ups, lay)
+    key = jax.random.key(77)
+    via_tree, info_a = ota.ota_aggregate(key, ups, bits, weights)
+    via_packed, info_b = ota.ota_aggregate_packed(key, X, bits, weights, lay)
+    for a, b in zip(jax.tree.leaves(via_tree), jax.tree.leaves(via_packed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert info_a["noise_std"] == info_b["noise_std"]
+
+
 def test_channel_uses_constant_in_clients():
     """The OTA property: channel uses don't scale with #clients."""
     assert ota.channel_uses([4, 8, 16, 32], 1000) == 1000

@@ -1,0 +1,89 @@
+"""pack/unpack round-trips over the static flat Layout (core/packing.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+
+
+def _mixed_tree():
+    rng = np.random.RandomState(0)
+    return {
+        "w": jnp.asarray(rng.randn(17, 9).astype(np.float32)),
+        "b": jnp.asarray(rng.randn(33).astype(np.float32) * 5, jnp.bfloat16),
+        "nested": [
+            jnp.asarray(rng.randint(-50, 50, size=(4, 3)), jnp.int32),
+            (jnp.asarray(2.5, jnp.float32), jnp.asarray(rng.randn(7, 1, 2),
+                                                        jnp.float32)),
+        ],
+    }
+
+
+def test_default_block_matches_fused_kernel_tile():
+    # layout-padded rows must drop into the fused OTA kernel unre-padded
+    from repro.kernels.ota_fused import BLOCK_COLS
+
+    assert packing.DEFAULT_BLOCK == BLOCK_COLS
+
+
+def test_layout_static_fields():
+    tree = _mixed_tree()
+    lay = packing.make_layout(tree, block=128)
+    assert lay.size == 17 * 9 + 33 + 12 + 1 + 14
+    assert lay.padded_size % 128 == 0
+    assert lay.padded_size >= lay.size
+    assert lay.offsets[0] == 0
+    assert lay.offsets[-1] + lay.sizes[-1] == lay.size
+    # hashable => usable as a jit static argument
+    assert hash(lay) == hash(packing.make_layout(tree, block=128))
+
+
+def test_pack_unpack_roundtrip_mixed_dtypes():
+    tree = _mixed_tree()
+    lay = packing.make_layout(tree, block=256)
+    flat = packing.pack(tree, lay)
+    assert flat.shape == (lay.padded_size,) and flat.dtype == jnp.float32
+    # pad region is exact zeros
+    assert float(jnp.abs(flat[lay.size:]).max()) == 0.0
+    got = packing.unpack(flat, lay)
+    assert jax.tree.structure(got) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-6)
+
+
+def test_unpack_without_cast_keeps_f32():
+    tree = _mixed_tree()
+    lay = packing.make_layout(tree)
+    got = packing.unpack(packing.pack(tree, lay), lay, cast=False)
+    assert all(l.dtype == jnp.float32 for l in jax.tree.leaves(got))
+
+
+def test_pack_batch_stacks_rows():
+    rng = np.random.RandomState(1)
+    trees = [{"a": jnp.asarray(rng.randn(50).astype(np.float32)),
+              "b": jnp.asarray(rng.randn(6, 6).astype(np.float32))}
+             for _ in range(4)]
+    lay = packing.make_layout(trees[0], block=64)
+    X = packing.pack_batch(trees, lay)
+    assert X.shape == (4, lay.padded_size)
+    for i, t in enumerate(trees):
+        np.testing.assert_array_equal(np.asarray(X[i]),
+                                      np.asarray(packing.pack(t, lay)))
+
+
+def test_scalar_and_empty_padding_edges():
+    tree = {"s": jnp.asarray(3.0)}
+    lay = packing.make_layout(tree, block=8)
+    assert lay.size == 1 and lay.padded_size == 8
+    got = packing.unpack(packing.pack(tree, lay), lay)
+    assert float(got["s"]) == 3.0 and got["s"].shape == ()
+
+
+def test_layout_mismatch_is_detected():
+    tree = _mixed_tree()
+    lay = packing.make_layout(tree, block=128)
+    with pytest.raises(AssertionError):
+        packing.pack({"only": jnp.zeros((3,))}, lay)
