@@ -9,13 +9,23 @@ Sweeps cohort size K and model size M and reports wall time per round for
 - ``flat``:   ``ota.ota_aggregate_packed`` — pack once (excluded; clients
   pack at the edge), then ONE jitted program: fused stochastic quantize +
   superposition + AWGN epilogue.
+- ``packed``: the same entry point fed quantized+bit-packed wire rows
+  (``ota.quantize_uplink`` -> ``packing.PackedRow``): clients quantize at
+  the edge, the fused pass dequantizes in-tile. The table also reports
+  **bytes-on-wire** — what the cohort's uplink actually occupies (int4 =
+  two symbols/byte + one f32 scale) vs the f32 rows it replaces; a pure
+  4-bit cohort must come in at <= 1/7 of f32 (acceptance bar; the exact
+  figure is ~1/8).
 
 On CPU the flat path runs the XLA-fused jnp formulation of the kernel
 (interpret-mode Pallas is a correctness tool, not a perf path) — the
 "CPU-interpret-off jit path". On TPU it runs the Pallas kernel.
 
-Usage:  python benchmarks/bench_aggregation.py [--full] [--csv]
-``--full`` extends the sweep to M = 10M+ parameter models.
+Usage:  python benchmarks/bench_aggregation.py [--full] [--csv] [--smoke]
+``--full`` extends the sweep to M = 10M+ parameter models. ``--smoke``
+is the CI mode (scripts/tier1.sh): one tiny config, asserts the 4-bit
+wire-byte bar and packed-vs-f32 aggregate equivalence, exits non-zero on
+violation.
 """
 from __future__ import annotations
 
@@ -51,10 +61,22 @@ def _bits(K: int):
     return [(4, 8, 8, 16, 32)[i % 5] for i in range(K)]
 
 
+def _make_rows(X, bits, key):
+    """Quantize+bit-pack every client row at the edge (the wire format)."""
+    sr = ota.derive_sr_seed(key)
+    rows = [ota.quantize_uplink(X[i], b, sr, i) for i, b in enumerate(bits)]
+    jax.block_until_ready([r.data for r in rows])
+    return rows
+
+
 def bench_pair(K: int, M: int, reps: int = 3, legacy_reps: int = 1,
                legacy_cap_elems: float = 2e8):
-    """Returns (legacy_s, flat_s, speedup). legacy is skipped (nan) above
-    legacy_cap_elems K*M to keep the sweep finishable."""
+    """Returns (legacy_s, flat_s, packed_s, wire_ratio, speedup).
+
+    legacy is skipped (nan) above legacy_cap_elems K*M to keep the sweep
+    finishable. wire_ratio = cohort bytes-on-wire / f32-row bytes for the
+    mixed 4/8/8/16/32 cohort (``_bits``).
+    """
     ups = [_tree_of(M, seed=i) for i in range(K)]
     bits = _bits(K)
     weights = [1.0 + (i % 3) for i in range(K)]
@@ -74,9 +96,23 @@ def bench_pair(K: int, M: int, reps: int = 3, legacy_reps: int = 1,
     jax.block_until_ready(jax.tree.leaves(out))
     flat_s = (time.perf_counter() - t0) / reps
 
+    # ---- packed wire rows (client-side quantization excluded: that cost
+    # lives at the edge, like packing; we time the server data plane)
+    rows = _make_rows(X, bits, key)
+    out, info = ota.ota_aggregate_packed(key, rows, bits, weights, layout,
+                                         cfg)
+    jax.block_until_ready(jax.tree.leaves(out))
+    wire_ratio = info["uplink_bytes"] / info["uplink_bytes_f32"]
+    t0 = time.perf_counter()
+    for r in range(reps):
+        out, _ = ota.ota_aggregate_packed(jax.random.key(r), rows, bits,
+                                          weights, layout, cfg)
+    jax.block_until_ready(jax.tree.leaves(out))
+    packed_s = (time.perf_counter() - t0) / reps
+
     # ---- legacy per-tree loop
     if K * M > legacy_cap_elems:
-        return float("nan"), flat_s, float("nan")
+        return float("nan"), flat_s, packed_s, wire_ratio, float("nan")
     out, _ = ota.ota_aggregate_pertree(key, ups, bits, weights, cfg)
     jax.block_until_ready(jax.tree.leaves(out))
     t0 = time.perf_counter()
@@ -85,7 +121,50 @@ def bench_pair(K: int, M: int, reps: int = 3, legacy_reps: int = 1,
                                            weights, cfg)
     jax.block_until_ready(jax.tree.leaves(out))
     legacy_s = (time.perf_counter() - t0) / legacy_reps
-    return legacy_s, flat_s, legacy_s / flat_s
+    return legacy_s, flat_s, packed_s, wire_ratio, legacy_s / flat_s
+
+
+def bench_4bit_wire(K: int = 8, M: int = 1 << 17) -> float:
+    """Pure-4-bit cohort bytes-on-wire ratio vs the f32 rows it replaces.
+
+    This is the acceptance measurement: int4 packs two symbols per byte
+    plus one f32 scale per row, so the ratio lands at ~1/8 and must stay
+    <= 1/7.
+    """
+    ups = [_tree_of(M, seed=i) for i in range(K)]
+    layout = packing.make_layout(ups[0])
+    X = packing.pack_batch(ups, layout)
+    rows = _make_rows(X, [4] * K, jax.random.key(0))
+    wire = sum(r.wire_nbytes for r in rows)
+    f32 = 4 * layout.padded_size * K
+    print(f"4-bit cohort (K={K}, M={M}): {wire} bytes on wire vs "
+          f"{f32} f32 bytes -> ratio {wire / f32:.4f} "
+          f"(bar: <= {1 / 7:.4f})")
+    return wire / f32
+
+
+def smoke() -> int:
+    """CI mode: tiny config, hard-asserted acceptance checks (~seconds)."""
+    K, M = 6, 1 << 14
+    ups = [_tree_of(M, seed=i) for i in range(K)]
+    bits = [4, 4, 8, 16, 32, 4]
+    weights = [1.0 + (i % 3) for i in range(K)]
+    cfg = ota.OTAConfig(snr_db=20.0)
+    layout = packing.make_layout(ups[0])
+    X = packing.pack_batch(ups, layout)
+    key = jax.random.key(3)
+    rows = _make_rows(X, bits, key)
+    flat, _ = ota.ota_aggregate_packed(key, X, bits, weights, layout, cfg)
+    packed, info = ota.ota_aggregate_packed(key, rows, bits, weights,
+                                            layout, cfg)
+    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(packed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    ratio = bench_4bit_wire(K=4, M=M)
+    assert ratio <= 1 / 7, f"4-bit wire ratio {ratio} above 1/7"
+    print(f"smoke OK: packed == f32 aggregate (K={K}, M={M}); mixed-cohort "
+          f"wire bytes {info['uplink_bytes']}/{info['uplink_bytes_f32']}")
+    return 0
 
 
 def main():
@@ -93,23 +172,32 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="include 10M+ param configs")
     ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny config + hard acceptance asserts")
     args = ap.parse_args()
 
+    if args.smoke:
+        raise SystemExit(smoke())
+
     sweep = QUICK_SWEEP + (FULL_EXTRA if args.full else [])
-    header = f"{'K':>4} {'M':>10} {'legacy_ms':>10} {'flat_ms':>9} {'speedup':>8}"
+    header = (f"{'K':>4} {'M':>10} {'legacy_ms':>10} {'flat_ms':>9} "
+              f"{'packed_ms':>10} {'wire':>6} {'speedup':>8}")
     if args.csv:
-        print("K,M,legacy_ms,flat_ms,speedup")
+        print("K,M,legacy_ms,flat_ms,packed_ms,wire_ratio,speedup")
     else:
         print(header)
     rows = []
     for K, M in sweep:
-        legacy_s, flat_s, speed = bench_pair(K, M)
-        rows.append((K, M, legacy_s, flat_s, speed))
+        legacy_s, flat_s, packed_s, wire, speed = bench_pair(K, M)
+        rows.append((K, M, legacy_s, flat_s, packed_s, wire, speed))
         if args.csv:
-            print(f"{K},{M},{legacy_s*1e3:.1f},{flat_s*1e3:.1f},{speed:.1f}")
+            print(f"{K},{M},{legacy_s*1e3:.1f},{flat_s*1e3:.1f},"
+                  f"{packed_s*1e3:.1f},{wire:.4f},{speed:.1f}")
         else:
             print(f"{K:>4} {M:>10} {legacy_s*1e3:>10.1f} {flat_s*1e3:>9.1f} "
-                  f"{speed:>7.1f}x")
+                  f"{packed_s*1e3:>10.1f} {wire:>6.3f} {speed:>7.1f}x")
+    if not args.csv:  # keep --csv output machine-parseable
+        bench_4bit_wire()
     return rows
 
 

@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Docs consistency check (CI tier-1, see scripts/tier1.sh).
+
+Fails when README.md / DESIGN.md / benchmarks/README.md reference files
+that don't exist or `repro.*` module paths that don't resolve, or when a
+`DESIGN.md §N` reference (in the docs or any src/ docstring) points at a
+section DESIGN.md doesn't have. This is what keeps the docs layer from
+silently rotting as modules move.
+
+Rules (deliberately conservative — symbols and prose are not checked):
+- a whitespace-split token ending in a known file extension (optionally
+  with a ``::symbol`` suffix) must exist, resolved against the repo
+  root, ``src/repro/`` (so ``core/ota.py`` works), or — for bare
+  basenames — the set of all tracked file names;
+- a token ending in ``/`` must be an existing directory (same roots);
+- a ``repro.foo.bar`` dotted path must resolve to a module or package
+  under ``src/``;
+- every §N in a ``DESIGN.md §...`` reference must have a ``## §N``
+  heading in DESIGN.md.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = ["README.md", "DESIGN.md", "benchmarks/README.md"]
+EXTS = (".py", ".md", ".sh", ".txt", ".json", ".csv")
+STRIP = "`*,;:()[]|<>\"'"
+
+
+def _all_basenames() -> set:
+    names = set()
+    for sub in ("src", "tests", "scripts", "examples", "benchmarks"):
+        for p in (ROOT / sub).rglob("*"):
+            if p.is_file():
+                names.add(p.name)
+    names.update(p.name for p in ROOT.iterdir() if p.is_file())
+    return names
+
+
+def _resolves(tok: str, basenames: set) -> bool:
+    tok = tok.split("::")[0]
+    if "/" not in tok:
+        return (tok in basenames or (ROOT / tok).exists()
+                or (ROOT / "src" / "repro" / tok).exists())
+    for base in (ROOT, ROOT / "src" / "repro", ROOT / "src"):
+        if (base / tok).exists():
+            return True
+    return False
+
+
+def _module_resolves(dotted: str) -> bool:
+    rel = pathlib.Path(*dotted.split("."))
+    base = ROOT / "src"
+    return (base / rel).is_dir() or (base / rel).with_suffix(".py").is_file()
+
+
+def check_doc(path: pathlib.Path, basenames: set, errors: list) -> None:
+    text = path.read_text()
+    rel = path.relative_to(ROOT)
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for raw in line.split():
+            tok = raw.strip(STRIP)
+            if not tok or tok.startswith(("http://", "https://")):
+                continue
+            if "*" in tok or "{" in tok:
+                continue  # glob / placeholder
+            if tok.endswith("/"):
+                if not _resolves(tok.rstrip("/"), basenames):
+                    errors.append(f"{rel}:{lineno}: missing dir {tok!r}")
+            elif tok.split("::")[0].endswith(EXTS):
+                if not _resolves(tok, basenames):
+                    errors.append(f"{rel}:{lineno}: missing file {tok!r}")
+            elif re.fullmatch(r"repro(\.[A-Za-z_][A-Za-z0-9_]*)+", tok):
+                # dotted refs may end in a symbol; accept if any prefix
+                # with >= 2 segments resolves to a module/package
+                parts = tok.split(".")
+                if not any(_module_resolves(".".join(parts[:i]))
+                           for i in range(2, len(parts) + 1)):
+                    errors.append(f"{rel}:{lineno}: stale module {tok!r}")
+
+
+def check_sections(errors: list) -> None:
+    design = (ROOT / "DESIGN.md").read_text()
+    have = set(re.findall(r"^##\s*§(\d+)", design, re.M))
+    sources = [ROOT / d for d in DOCS]
+    sources += sorted((ROOT / "src").rglob("*.py"))
+    for path in sources:
+        text = path.read_text()
+        rel = path.relative_to(ROOT)
+        for m in re.finditer(r"DESIGN\.md[^)\n]*", text):
+            for sec in re.findall(r"§(\d+)", m.group(0)):
+                if sec not in have:
+                    errors.append(
+                        f"{rel}: reference to DESIGN.md §{sec}, but "
+                        f"DESIGN.md has no '## §{sec}' heading")
+
+
+def main() -> int:
+    errors: list = []
+    basenames = _all_basenames()
+    for doc in DOCS:
+        p = ROOT / doc
+        if not p.is_file():
+            errors.append(f"{doc} is missing")
+            continue
+        check_doc(p, basenames, errors)
+    if (ROOT / "DESIGN.md").is_file():
+        check_sections(errors)
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docs: OK ({', '.join(DOCS)})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

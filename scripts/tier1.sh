@@ -1,6 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 verify (see ROADMAP.md): the whole suite, stop on first failure.
-# Run from the repo root:  bash scripts/tier1.sh [extra pytest args...]
+# Tier-1 verify (see ROADMAP.md): docs consistency, packed-uplink bench
+# smoke (hard-asserted acceptance checks), then the whole suite, stop on
+# first failure. Run from the repo root:  bash scripts/tier1.sh [extra
+# pytest args...]
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python scripts/check_docs.py
+python benchmarks/bench_aggregation.py --smoke
+python -m pytest -x -q "$@"

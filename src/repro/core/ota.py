@@ -14,8 +14,8 @@ Physical model (paper refs [1], [2]):
 - The server receives  sum_i alpha_i * dq(update_i)  + AWGN scaled by the
   receive SNR and the number of participating clients' aligned power.
 
-Data plane (flat pipeline)
---------------------------
+Data plane (flat pipeline, DESIGN.md §5)
+----------------------------------------
 
 The per-round hot path is one flat, batched, jitted program:
 
@@ -24,12 +24,19 @@ The per-round hot path is one flat, batched, jitted program:
    passes it down; the pytree entry point below derives it per call),
    giving the ``(K, M)`` client-update matrix — the OTA superposition is a
    reduction over its K axis, so cohort size never changes program shape
-   beyond K.
-2. **Fuse** stochastic quantize -> dequantize onto the shared analog grid
-   -> FedAvg-weighted superposition in ONE pass over (K, block) tiles
-   (``kernels/ota_fused.py`` on TPU; its jnp oracle
-   ``kernels/ref.ota_fused_ref`` on CPU, where interpret-mode Pallas is a
-   correctness tool, not a perf path). Each client uses a single
+   beyond K. In the end-to-end FL loop the row additionally goes out as a
+   *quantized, bit-packed* wire row (``quantize_uplink`` ->
+   ``packing.PackedRow``, DESIGN.md §6): 4-bit clients ship two symbols
+   per byte, so the simulator's uplink traffic matches the air interface
+   instead of being 8x f32-inflated.
+2. **Fuse** the per-round quantize/superpose into ONE pass over
+   (K, block) tiles (``kernels/ota_fused.py`` on TPU; jnp oracles in
+   ``kernels/ref.py`` on CPU, where interpret-mode Pallas is a
+   correctness tool, not a perf path). Two in-pass variants share the
+   dither stream and grid semantics: f32 rows run stochastic quantize ->
+   dequantize -> weighted superposition (``ota_fused_2d``); packed rows
+   arrive pre-quantized and run unpack -> dequant -> superposition per
+   storage class (``ota_packed_2d``). Each client uses a single
    per-update quant scale — the faithful physical choice: one analog
    constellation per client per round. The kernel is bits-agnostic
    (precision enters as (K,) scale/qmax arrays), so one compiled program
@@ -118,6 +125,36 @@ def _client_grid(bits: jnp.ndarray, amax: jnp.ndarray):
     return scale, qmax
 
 
+def derive_sr_seed(key) -> jnp.ndarray:
+    """The round's stochastic-rounding seed, as ``ota_aggregate_flat``
+    derives it internally from the round key.
+
+    Clients quantizing at the edge (``quantize_uplink``) need this seed
+    *before* the aggregation call; deriving it from the same key split
+    keeps the packed path bit-identical to in-aggregate quantization (and
+    to ``ota_aggregate_pertree``) for the same round key.
+    """
+    _, k_quant, _ = jax.random.split(key, 3)
+    return jax.random.bits(k_quant, (), jnp.uint32)
+
+
+def quantize_uplink(row: jnp.ndarray, bits: int, sr_seed: jnp.ndarray,
+                    row_index: int) -> packing.PackedRow:
+    """Modulate one client's flat packed row onto the wire (DESIGN.md §6).
+
+    Stochastic-quantizes ``row`` at ``bits`` using the round dither stream
+    (``derive_sr_seed``; ``row_index`` = the client's row in this round's
+    cohort, counting reporting clients only) and bit-packs the symbols:
+    two per byte for 4-bit clients, int8/int16 above, f32 passthrough for
+    unquantized clients. The server dequantizes inside the fused
+    aggregation pass — the f32 row never crosses the uplink.
+    """
+    q, scale = quant.quantize_row_sr(row, bits, sr_seed, row_index)
+    if packing.wire_kind(bits) == "int4":
+        q = kops.pack_int4_rows(q)
+    return packing.PackedRow(data=q, scale=scale, bits=int(bits))
+
+
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "n_valid", "use_kernel"))
 def ota_aggregate_flat(key, X: jnp.ndarray, bits: jnp.ndarray,
@@ -154,6 +191,89 @@ def ota_aggregate_flat(key, X: jnp.ndarray, bits: jnp.ndarray,
     return y, habs, participate, noise_std
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _round_channel(key, weights, *, cfg: OTAConfig):
+    """Channel draw + FedAvg weight renormalisation (cache keys on K)."""
+    k_chan, _, _ = jax.random.split(key, 3)
+    habs, participate = sample_channel(k_chan, weights.shape[0],
+                                       cfg.fade_threshold)
+    w = jnp.asarray(weights, jnp.float32) * participate
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+    return habs, participate, w
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_valid"))
+def _awgn_epilogue(key, acc, *, cfg: OTAConfig, n_valid: int):
+    """Receiver AWGN on the combined aggregate (cache keys on (M, n_valid)).
+
+    Identical to ota_aggregate_flat's epilogue: padding is exact zeros in
+    every storage class, so the padded sumsq equals the n_valid one.
+    """
+    _, _, k_noise = jax.random.split(key, 3)
+    sumsq = jnp.sum(acc * acc)
+    noise_std = jnp.sqrt(sumsq / n_valid * 10 ** (-cfg.snr_db / 10))
+    y = acc[:n_valid] + noise_std * jax.random.normal(k_noise, (n_valid,))
+    return y, noise_std
+
+
+_packed_ref_jit = jax.jit(kref.ota_packed_ref, static_argnames=("packed4",))
+
+
+def _aggregate_rows_flat(key, datas, scales, perm, weights, *,
+                         kinds: Tuple[str, ...], cfg: OTAConfig,
+                         n_valid: int, use_kernel: bool = False):
+    """Aggregate packed uplink rows grouped by wire storage class.
+
+    datas/scales: per-kind stacked (Kg, ...) symbol matrices and (Kg,)
+    quant scales, ordered per ``kinds``; ``perm`` maps group order back to
+    the cohort's original row order (weights/channel stay in cohort
+    order). One fused dequant->superpose pass per storage group
+    (``kernels.ota_packed_2d`` / ``ref.ota_packed_ref``), then the shared
+    AWGN epilogue on the combined aggregate — same channel, weight
+    renormalisation, and noise-draw semantics as ``ota_aggregate_flat``.
+
+    Deliberately NOT one jitted program: the group composition (which
+    kinds, how many rows each) changes round to round with the planner's
+    bit decisions and dropouts, and a composition-keyed jit would retrace
+    per distinct mix. Instead the pieces are jitted on small key spaces —
+    channel on K, each group pass on (Kg, kind), epilogue on (M, n_valid)
+    — so a varying cohort reuses compiled code across rounds.
+    """
+    habs, participate, w = _round_channel(key, weights, cfg=cfg)
+    wg = w[perm]  # group-order view of the cohort weights
+
+    acc = None
+    off = 0
+    for kind, data, scale in zip(kinds, datas, scales):
+        kg = scale.shape[0]
+        wseg = jax.lax.slice_in_dim(wg, off, off + kg)
+        off += kg
+        fn = kops.ota_dequant_superpose if use_kernel else _packed_ref_jit
+        part = fn(data, scale, wseg, packed4=(kind == "int4"))
+        acc = part if acc is None else acc + part
+
+    y, noise_std = _awgn_epilogue(key, acc, cfg=cfg, n_valid=n_valid)
+    return y, habs, participate, noise_std
+
+
+def _group_rows(rows: Sequence[packing.PackedRow]):
+    """Stable-sort rows by storage class -> (kinds, datas, scales, perm)."""
+    order = sorted(range(len(rows)),
+                   key=lambda i: packing.KIND_RANK[rows[i].kind])
+    kinds, datas, scales, perm = [], [], [], []
+    i = 0
+    while i < len(order):
+        kind = rows[order[i]].kind
+        grp = [j for j in order[i:] if rows[j].kind == kind]
+        kinds.append(kind)
+        datas.append(jnp.stack([rows[j].data for j in grp]))
+        scales.append(jnp.stack([rows[j].scale for j in grp]))
+        perm.extend(grp)
+        i += len(grp)
+    return (tuple(kinds), tuple(datas), tuple(scales),
+            jnp.asarray(perm, jnp.int32))
+
+
 def _info_dict(habs, participate, noise_std) -> Dict[str, Any]:
     participate = jax.device_get(participate)
     return {
@@ -166,7 +286,7 @@ def _info_dict(habs, participate, noise_std) -> Dict[str, Any]:
 
 def ota_aggregate_packed(
     key,
-    X: jnp.ndarray,
+    X,
     bits: Sequence[int],
     weights: Sequence[float],
     layout: packing.Layout,
@@ -177,16 +297,38 @@ def ota_aggregate_packed(
     """Aggregate pre-packed client rows; unpack the result per ``layout``.
 
     The entry point for callers that already hold flat updates (the FL
-    server packs each client's delta exactly once, at the client).
+    server packs each client's delta exactly once, at the client). ``X``
+    is either the legacy (K, M) f32 matrix — quantization then happens
+    inside the fused pass — or a sequence of ``packing.PackedRow``
+    produced by ``quantize_uplink`` with this round's ``derive_sr_seed``;
+    then the rows arrive already quantized+bit-packed and the pass only
+    dequantizes (DESIGN.md §5-§6). Same round key => identical aggregate
+    either way (same dither stream, channel, and noise draws).
     """
     if use_kernel is None:
         use_kernel = _use_kernel_default()
-    y, habs, participate, noise_std = ota_aggregate_flat(
-        key, X, jnp.asarray(bits, jnp.int32),
-        jnp.asarray(weights, jnp.float32),
-        cfg=cfg, n_valid=layout.size, use_kernel=use_kernel)
+    if packing.is_packed_rows(X):
+        rows: Sequence[packing.PackedRow] = X
+        if bits is not None:
+            assert [int(b) for b in bits] == [r.bits for r in rows], \
+                "bits arg disagrees with PackedRow.bits"
+        kinds, datas, scales, perm = _group_rows(rows)
+        y, habs, participate, noise_std = _aggregate_rows_flat(
+            key, datas, scales, perm,
+            jnp.asarray(weights, jnp.float32),
+            kinds=kinds, cfg=cfg, n_valid=layout.size,
+            use_kernel=use_kernel)
+        info = _info_dict(habs, participate, noise_std)
+        info["uplink_bytes"] = int(sum(r.wire_nbytes for r in rows))
+        info["uplink_bytes_f32"] = 4 * layout.padded_size * len(rows)
+    else:
+        y, habs, participate, noise_std = ota_aggregate_flat(
+            key, X, jnp.asarray(bits, jnp.int32),
+            jnp.asarray(weights, jnp.float32),
+            cfg=cfg, n_valid=layout.size, use_kernel=use_kernel)
+        info = _info_dict(habs, participate, noise_std)
     agg = packing.unpack(y, layout, cast=False)
-    return agg, _info_dict(habs, participate, noise_std)
+    return agg, info
 
 
 def ota_aggregate(
@@ -208,7 +350,15 @@ def ota_aggregate(
     Packs once into the (K, M) matrix and runs the fused flat pipeline
     (module docstring). Returns (aggregated update pytree with f32 leaves,
     info dict with participation/noise stats).
+
+    ``updates`` may also be a sequence of ``packing.PackedRow`` (already
+    quantized+bit-packed uplinks, see ``quantize_uplink``); then
+    ``layout`` is required — there is no pytree to derive it from.
     """
+    if packing.is_packed_rows(updates):
+        assert layout is not None, "packed rows need an explicit layout"
+        return ota_aggregate_packed(key, updates, bits, weights, layout,
+                                    cfg, use_kernel=use_kernel)
     if layout is None:
         layout = packing.make_layout(updates[0])
     X = packing.pack_batch(updates, layout)

@@ -63,6 +63,84 @@ class Layout:
         return self.padded_size - self.size
 
 
+# --------------------------------------------------------------------------
+# Packed uplink wire format (DESIGN.md §6)
+# --------------------------------------------------------------------------
+
+# storage class per planned precision: the smallest wire dtype that holds
+# the symmetric integer symbols. int4 is two symbols per byte
+# (kernels.ops.pack_int4_rows). bits <= 1 has an empty symmetric grid
+# (qmax = 2^(b-1) - 1 = 0) and rides through unquantized, exactly like
+# the fused f32 path's qmax == 0 passthrough; bits >= 32 is unquantized
+# by definition. 17..31 bits quantize like every other level — int32
+# symbols save no bytes over f32 but keep the packed/flat equivalence.
+def wire_kind(bits: int) -> str:
+    """"int4"|"int8"|"int16"|"int32"|"float32" for a b-bit uplink row."""
+    if bits <= 1 or bits >= 32:
+        return "float32"
+    if bits <= 4:
+        return "int4"
+    if bits <= 8:
+        return "int8"
+    if bits <= 16:
+        return "int16"
+    return "int32"
+
+
+# public: core/ota groups cohort rows by this ordering (densest first)
+KIND_RANK = {"int4": 0, "int8": 1, "int16": 2, "int32": 3, "float32": 4}
+
+
+def row_wire_bytes(bits: int, padded_size: int) -> int:
+    """Bytes one client's packed row occupies on the wire.
+
+    Quantized rows carry their symbols plus one f32 per-update scale;
+    the f32 passthrough row is just the symbols.
+    """
+    kind = wire_kind(bits)
+    if kind == "float32":
+        return 4 * padded_size
+    if kind == "int4":  # two symbols per byte, odd length rounds up
+        return (padded_size + 1) // 2 + 4  # + the () f32 scale
+    per = {"int8": 1, "int16": 2, "int32": 4}[kind]
+    return per * padded_size + 4
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedRow:
+    """One client's uplink in wire form: quantized symbols + analog grid.
+
+    data: (padded_size//2,) uint8 for a 4-bit client (two symbols per
+    byte, ``kernels.ops.pack_int4_rows``), (padded_size,) int8/int16/
+    int32 for 5..8 / 9..16 / 17..31 bits, or the (padded_size,) f32 row
+    for an unquantized client (bits >= 32, or <= 1 where the symmetric
+    grid is empty). scale is the () f32 per-update analog grid step (1 for f32
+    rows); bits the planned precision. Dequantization (q * scale) happens
+    inside the fused aggregation pass (``kernels/ota_fused.ota_packed_2d``
+    / ``kernels/ref.ota_packed_ref``) — the f32 row never exists between
+    client and server.
+    """
+
+    data: jnp.ndarray
+    scale: jnp.ndarray
+    bits: int
+
+    @property
+    def kind(self) -> str:
+        return wire_kind(self.bits)
+
+    @property
+    def wire_nbytes(self) -> int:
+        n = int(self.data.size) * jnp.dtype(self.data.dtype).itemsize
+        return n if self.kind == "float32" else n + 4
+
+
+def is_packed_rows(x: Any) -> bool:
+    """True when ``x`` is a sequence of ``PackedRow`` (vs a (K, M) matrix)."""
+    return (isinstance(x, (list, tuple)) and len(x) > 0
+            and all(isinstance(r, PackedRow) for r in x))
+
+
 def make_layout(tree: Pytree, block: int = DEFAULT_BLOCK) -> Layout:
     """Derive the static flat layout of ``tree`` (leaf order = treedef order)."""
     leaves, treedef = jax.tree.flatten(tree)

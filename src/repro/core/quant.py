@@ -12,6 +12,7 @@ against these (see kernels/*/ref.py which re-export from here).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -65,6 +66,48 @@ def fake_quant(
         return x
     q, scale = quantize(x, bits, key=key)
     return dequantize(q, scale, bits).astype(x.dtype)
+
+
+_STORAGE_DTYPE = {"int4": jnp.int8, "int8": jnp.int8,
+                  "int16": jnp.int16, "int32": jnp.int32}
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize_row_sr(row: jnp.ndarray, bits: int, sr_seed: jnp.ndarray,
+                    row_index: jnp.ndarray):
+    """Client-side uplink quantization of one flat packed row.
+
+    Stochastic rounding driven by the OTA data plane's positional dither
+    (``kernels.ota_fused.sr_dither`` over ``(sr_seed, row_index, pos)``) —
+    the identical uniforms the in-kernel quantizer and the per-tree oracle
+    draw, so a client quantizing at the edge produces bit-for-bit the
+    symbols the fused f32 path would have produced on the server. Returns
+    (q, scale): q int8 for bits <= 8, int16/int32 up to 16/31 bits, the
+    f32 row unchanged (scale 1) for bits >= 32 — and for bits <= 1,
+    whose symmetric grid is empty (qmax = 0): those pass through
+    unquantized, mirroring the fused kernel's qmax == 0 passthrough
+    instead of dividing by zero. Zero padding quantizes to exact
+    integer 0 (frac = 0 and the dither is strictly < 1), so packed rows
+    keep the exact-zero pad region the aggregate norm relies on.
+    """
+    from repro.core.packing import wire_kind
+    from repro.kernels.ota_fused import sr_dither
+
+    row = jnp.asarray(row).astype(jnp.float32)
+    kind = wire_kind(bits)
+    if kind == "float32":
+        return row, jnp.ones((), jnp.float32)
+    qmax = jnp.exp2(jnp.float32(bits - 1)) - 1.0  # == qrange(bits), f32
+    amax = jnp.max(jnp.abs(row))
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    pos = jnp.arange(row.shape[0], dtype=jnp.uint32)
+    u = sr_dither(jnp.asarray(sr_seed, jnp.uint32),
+                  jnp.asarray(row_index, jnp.uint32), pos)
+    scaled = row / scale
+    floor = jnp.floor(scaled)
+    q = floor + (u < (scaled - floor)).astype(jnp.float32)
+    q = jnp.clip(q, -qmax, qmax)
+    return q.astype(_STORAGE_DTYPE[kind]), scale
 
 
 @jax.custom_vjp

@@ -7,7 +7,10 @@ thing the OTA channel superposes. With a ``layout`` the delta is returned
 already flat-packed (``core.packing``): the client is the one that
 modulates its update onto the analog symbol stream, so the pytree never
 crosses the client/server boundary and the server stacks rows straight
-into the (K, M) aggregation matrix.
+into the (K, M) aggregation matrix. With the round's dither seed as well,
+the client also *quantizes and bit-packs* its row (``ota.quantize_uplink``
+-> ``packing.PackedRow``): a 4-bit client's uplink is two symbols per
+byte + one f32 scale, 1/8 the f32 row (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -58,12 +61,18 @@ class FLClient:
         local_steps: int = 4, local_batch: int = 8, lr: float = 5e-4,
         seed: int = 0, max_frames: int = 320, max_labels: int = 40,
         fedprox_mu: float = 0.0, layout: Optional[packing.Layout] = None,
-    ) -> Tuple[Pytree, Dict[str, float]]:
+        sr_seed: Optional[jnp.ndarray] = None, uplink_row: int = 0,
+    ) -> Tuple[Any, Dict[str, float]]:
         """Run local steps; return (delta, metrics).
 
-        With ``layout``, delta is the flat-packed (padded_size,) f32 row
-        ready to stack into the OTA aggregation matrix; otherwise the
-        parameter-delta pytree (legacy shape).
+        With ``layout`` alone, delta is the flat-packed (padded_size,) f32
+        row ready to stack into the OTA aggregation matrix. With
+        ``sr_seed`` too (the round dither seed, ``ota.derive_sr_seed``;
+        ``uplink_row`` = this client's row in the round cohort), delta is
+        the quantized+bit-packed wire row (``packing.PackedRow``) — the
+        client modulates its own uplink, at ``bits``, and only
+        sub-byte-packed symbols plus one scale cross to the server.
+        Without ``layout``: the parameter-delta pytree (legacy shape).
         """
         jitted, opt = self._step_fn(bits, lr, fedprox_mu)
         state = {"params": global_params, "opt": opt.init(global_params),
@@ -86,5 +95,10 @@ class FLClient:
             state["params"], global_params)
         if layout is not None:
             delta = packing.pack(delta, layout)
+            if sr_seed is not None:
+                from repro.core import ota
+
+                delta = ota.quantize_uplink(delta, bits, sr_seed,
+                                            uplink_row)
         return delta, {"loss_first": losses[0], "loss_last": losses[-1],
                        "n_samples": len(utts)}

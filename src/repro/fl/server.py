@@ -100,7 +100,13 @@ class FLServer:
         decisions = plan_round(self.planner.plan(users, specs))
         bits = {d.user_id: d.bits for d in decisions}
 
-        # ---- local training at the planned precision (stragglers drop out)
+        # ---- local training at the planned precision (stragglers drop out).
+        # The round key is fixed before the client loop so clients can
+        # quantize + bit-pack their uplinks at the edge with the round's
+        # shared dither stream (ota.derive_sr_seed); the server only ever
+        # sees PackedRow wire rows, never the f32 (K, M) matrix.
+        round_key = jax.random.key(self.cfg.seed * 131 + rnd)
+        sr_seed = ota.derive_sr_seed(round_key)
         deltas, weights, losses, active_ids = [], [], [], []
         drop_rng = np.random.RandomState(self.cfg.seed * 1237 + rnd)
         for d, i in zip(decisions, ids):
@@ -112,7 +118,8 @@ class FLServer:
                 local_steps=self.cfg.local_steps,
                 local_batch=self.cfg.local_batch,
                 lr=self.cfg.lr, seed=self.cfg.seed * 97 + rnd,
-                fedprox_mu=self.cfg.fedprox_mu, layout=self.layout)
+                fedprox_mu=self.cfg.fedprox_mu, layout=self.layout,
+                sr_seed=sr_seed, uplink_row=len(deltas))
             deltas.append(delta)
             # FedAvg weight = samples x estimated contribution C_q (the
             # strategy's lever: class-equal upweights minority-rich
@@ -131,13 +138,14 @@ class FLServer:
             self.round_logs.append(log)
             return log
 
-        # ---- mixed-precision OTA aggregation: stack the clients' packed
-        # rows into the (K, M) matrix and run the fused flat data plane
+        # ---- mixed-precision OTA aggregation: the clients' quantized,
+        # bit-packed wire rows go straight into the fused dequant +
+        # superpose data plane (grouped per storage class, DESIGN.md §5)
         agg, info = ota.ota_aggregate_packed(
-            jax.random.key(self.cfg.seed * 131 + rnd),
-            jnp.stack(deltas),
+            round_key, deltas,
             [bits[self.users[i].user_id] for i in active_ids],
             weights, self.layout, ota.OTAConfig(snr_db=self.cfg.snr_db))
+        self.last_uplink_bytes = info["uplink_bytes"]
         # server momentum (FedAvgM) on the aggregated update
         if self.cfg.server_momentum > 0.0:
             if not hasattr(self, "_velocity"):

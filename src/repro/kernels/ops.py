@@ -93,6 +93,29 @@ def ota_quantize_superpose(x: jnp.ndarray, scale: jnp.ndarray,
     return acc[:M], ss.reshape(())
 
 
+@functools.partial(jax.jit, static_argnames=("packed4",))
+def ota_dequant_superpose(q: jnp.ndarray, scale: jnp.ndarray,
+                          w: jnp.ndarray, *, packed4: bool = False):
+    """Receiver half of the packed uplink: dequant + weighted superpose.
+
+    q: (K, M) int8/int16/f32 pre-quantized client symbols, or (K, M//2)
+    uint8 row-major int4 nibbles when ``packed4`` (``pack_int4_rows``).
+    scale/w: (K,). Returns the (M,) f32 partial aggregate for this
+    storage group. The stochastic quantization happened client-side
+    (``core.quant.quantize_row_sr``); this pass never materialises the
+    f32 (K, M) matrix — the unpack runs inside the kernel tile. Oracle:
+    ``ref.ota_packed_ref``. Interpret mode off-TPU (CPU correctness tool;
+    the jnp oracle is the CPU perf path, as with ota_quantize_superpose).
+    """
+    interpret = jax.devices()[0].platform != "tpu"
+    bc = _otaf.BLOCK_COLS // 2 if packed4 else _otaf.BLOCK_COLS
+    M = 2 * q.shape[1] if packed4 else q.shape[1]
+    qp, _ = _pad_to(q, bc, axis=1)
+    out = _otaf.ota_packed_2d(qp, scale, w, packed4=packed4,
+                              interpret=interpret)
+    return out[:M]
+
+
 @jax.jit
 def qmatmul(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     """x (M, K) @ dequant(w_q (K, N) int8; per-channel scale (N,))."""
@@ -178,6 +201,39 @@ def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
     out = out.at[0::2].set(lo)
     out = out.at[1::2].set(hi)
     return out
+
+
+def pack_int4_rows(q: jnp.ndarray) -> jnp.ndarray:
+    """Row-major int4 pack: (..., M) int values in [-8, 7] -> (..., ceil(M/2))
+    uint8, adjacent *elements* sharing a byte (low nibble = even index).
+
+    The uplink wire variant of ``pack_int4`` (which pairs adjacent *rows*
+    for the weight layout): a client's flat update row stays a row, at
+    half the bytes. Odd M is zero-padded by one symbol; ``unpack_int4_rows``
+    takes the logical length to trim it back.
+    """
+    M = q.shape[-1]
+    if M % 2:
+        pad = [(0, 0)] * (q.ndim - 1) + [(0, 1)]
+        q = jnp.pad(q, pad)
+    lo = q[..., 0::2].astype(jnp.uint8) & 0x0F
+    hi = q[..., 1::2].astype(jnp.uint8) & 0x0F
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4_rows(packed: jnp.ndarray,
+                     n: Optional[int] = None) -> jnp.ndarray:
+    """Inverse of ``pack_int4_rows``: (..., P) uint8 -> (..., n) int8.
+
+    ``n`` trims the trailing pad symbol of an odd-length row (defaults to
+    2P). Same nibble math as the in-kernel unpack
+    (``ota_fused._unpack_nibbles``) — the bit-equality contract between
+    the packed aggregation kernel and its jnp oracle rides on that.
+    """
+    from repro.kernels.ota_fused import _unpack_nibbles
+
+    out = _unpack_nibbles(packed)
+    return out if n is None else out[..., :n]
 
 
 def quantize_weights_int4(w: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -1,4 +1,10 @@
-"""Pallas TPU kernel: fused mixed-precision OTA data plane.
+"""Pallas TPU kernels: fused mixed-precision OTA data plane.
+
+Two entry points share the (K, block) streaming grid and numerics:
+``ota_fused_2d`` consumes f32 rows and quantizes in-pass (below);
+``ota_packed_2d`` consumes pre-quantized bit-packed wire rows
+(``core/packing.PackedRow``, DESIGN.md §6) and only unpacks + dequantizes
+— for a 4-bit cohort its HBM read is 1/8 of the f32 matrix.
 
 One pass over the flat ``(K, M)`` client-update matrix does the whole
 per-round hot loop that ``core/ota.py`` used to run as three materialized
@@ -93,6 +99,76 @@ def _fused_kernel(seed_ref, scale_ref, qmax_ref, w_ref, x_ref, o_ref, ss_ref):
         ss_ref[0, 0] = 0.0
 
     ss_ref[0, 0] += jnp.sum(acc * acc)
+
+
+def _unpack_nibbles(p: jnp.ndarray) -> jnp.ndarray:
+    """(..., N) uint8 -> (..., 2N) int8: low nibble first, sign-extended.
+
+    The in-kernel half of the row-major int4 wire format
+    (``kernels.ops.pack_int4_rows``); kept here so the Pallas kernel body
+    and the jnp oracle run the exact same ops (bit-equality contract).
+    """
+    lo = (p & jnp.uint8(0x0F)).astype(jnp.int8)
+    hi = ((p >> jnp.uint8(4)) & jnp.uint8(0x0F)).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    return jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1],
+                                                2 * p.shape[-1])
+
+
+def _dq_superpose_kernel(scale_ref, w_ref, q_ref, o_ref):
+    """Dequantize pre-quantized rows and superpose: acc = sum_k w_k s_k q_k.
+
+    q_ref: (K, B) int8/int16/f32 tile — client-side quantized symbols (or
+    f32 passthrough rows with scale 1). The stochastic rounding already
+    happened at the client (core.quant.quantize_row_sr), so unlike
+    ``_fused_kernel`` there is no dither here — just the receiver-side
+    dequant+reduction over the packed wire format.
+    """
+    dq = q_ref[...].astype(jnp.float32) * scale_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sum(dq * w_ref[...].astype(jnp.float32),
+                         axis=0).reshape(o_ref.shape)
+
+
+def _dq_superpose_int4_kernel(scale_ref, w_ref, p_ref, o_ref):
+    """int4 variant: unpack two symbols per byte in-VMEM, then dequant+sum.
+
+    p_ref: (K, B//2) uint8 tile of row-major packed nibbles; the HBM read
+    for a 4-bit cohort is 1/8 of the f32 path.
+    """
+    q = _unpack_nibbles(p_ref[...])
+    dq = q.astype(jnp.float32) * scale_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sum(dq * w_ref[...].astype(jnp.float32),
+                         axis=0).reshape(o_ref.shape)
+
+
+def ota_packed_2d(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
+                  packed4: bool = False, interpret: bool = False):
+    """Dequant + weighted superpose of quantized client rows.
+
+    q: (K, M) int8/int16/f32 symbols, or (K, M//2) uint8 when ``packed4``
+    (row-major int4 nibbles; logical M = 2 * q.shape[1]). scale/w: (K,).
+    Returns the (M,) f32 partial aggregate for this storage group; the
+    caller combines groups and computes the AWGN power on the total
+    (see core/ota.py).
+    """
+    K, cols = q.shape
+    bc = BLOCK_COLS // 2 if packed4 else BLOCK_COLS
+    assert cols % bc == 0, (cols, bc)
+    M = 2 * cols if packed4 else cols
+    grid = (cols // bc,)
+    col = pl.BlockSpec((K, 1), lambda i: (0, 0))
+    tile = pl.BlockSpec((K, bc), lambda i: (0, i))
+    return pl.pallas_call(
+        _dq_superpose_int4_kernel if packed4 else _dq_superpose_kernel,
+        grid=grid,
+        in_specs=[col, col, tile],
+        out_specs=pl.BlockSpec((BLOCK_COLS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((M,), jnp.float32),
+        interpret=interpret,
+    )(scale.reshape(K, 1).astype(jnp.float32),
+      w.reshape(K, 1).astype(jnp.float32),
+      q)
 
 
 def ota_fused_2d(x: jnp.ndarray, scale: jnp.ndarray, qmax: jnp.ndarray,

@@ -60,6 +60,24 @@ def ota_fused_ref(x: jnp.ndarray, scale: jnp.ndarray, qmax: jnp.ndarray,
     return acc, jnp.sum(acc * acc)
 
 
+def ota_packed_ref(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
+                   packed4: bool = False) -> jnp.ndarray:
+    """Oracle for the packed-uplink dequant+superpose kernel
+    (``ota_fused.ota_packed_2d``).
+
+    q: (K, M) int8/int16/f32 symbols, or (K, M//2) uint8 row-major int4
+    nibbles when ``packed4``. scale/w: (K,). Returns the (M,) f32 partial
+    aggregate sum_k w_k * scale_k * q_k. Uses the same nibble unpack as
+    the kernel body so the two are bit-equal per storage group.
+    """
+    if packed4:
+        from repro.kernels.ota_fused import _unpack_nibbles
+
+        q = _unpack_nibbles(q)
+    dq = q.astype(jnp.float32) * scale.reshape(-1, 1).astype(jnp.float32)
+    return jnp.sum(dq * w.reshape(-1, 1).astype(jnp.float32), axis=0)
+
+
 def ota_aggregate_ref(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
                       noise_std: jnp.ndarray) -> jnp.ndarray:
     """Superpose K client streams: sum_k w_k x_k + noise_std * noise.

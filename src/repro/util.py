@@ -48,13 +48,24 @@ def get_abstract_mesh():
     return abstract if abstract is not None else _EMPTY_MESH
 
 
+# Meshes activated through use_mesh on jax versions where jax.set_mesh is
+# a bare global setter (no context manager, no read-back API): we keep our
+# own stack so nested/sequential use_mesh blocks restore the outer mesh on
+# exit instead of leaking the inner one into the rest of the process.
+_MESH_STACK: list = []
+
+
 @contextlib.contextmanager
 def use_mesh(mesh):
     """Activate ``mesh`` as the ambient mesh across jax versions.
 
     jax >= 0.5 spells this ``jax.set_mesh`` (a context manager in recent
     releases, a global setter before that); 0.4.x uses the ``with mesh:``
-    Mesh context. ``get_abstract_mesh`` above reads back either form.
+    Mesh context. ``get_abstract_mesh`` above reads back either form. On
+    the global-setter variant the previous mesh is saved and restored on
+    exit (``None`` — "no ambient mesh" — when this is the outermost
+    block), so servers switching meshes mid-process don't leak the inner
+    mesh past the ``with``.
     """
     set_mesh = getattr(jax, "set_mesh", None)
     if set_mesh is None:
@@ -65,8 +76,20 @@ def use_mesh(mesh):
     if hasattr(ctx, "__enter__"):
         with ctx:
             yield
-    else:  # global setter variant; callers are scripts/tests, no unset API
+        return
+    _MESH_STACK.append(mesh)
+    try:
         yield
+    finally:
+        _MESH_STACK.pop()
+        if _MESH_STACK:
+            set_mesh(_MESH_STACK[-1])
+        else:
+            try:
+                set_mesh(None)
+            except Exception:  # pragma: no cover - a jax.set_mesh that
+                pass           # rejects None leaves no unset API;
+                               # best-effort clear at the outermost level
 
 
 def constrain(x: jnp.ndarray, spec: P) -> jnp.ndarray:

@@ -122,6 +122,34 @@ def test_constrain_filters_indivisible_dims():
     """))
 
 
+def test_use_mesh_global_setter_restores_previous(monkeypatch):
+    """ROADMAP regression: on jax builds where ``jax.set_mesh`` is a bare
+    global setter (not a context manager), nested/sequential ``use_mesh``
+    blocks must restore the outer mesh on exit and clear it (None) at the
+    outermost level — not leak the inner mesh into the process."""
+    import jax
+
+    from repro import util
+
+    calls = []
+
+    def fake_set_mesh(mesh):
+        calls.append(mesh)
+        return None  # global-setter variant: nothing context-manager-like
+
+    monkeypatch.setattr(jax, "set_mesh", fake_set_mesh, raising=False)
+    a, b = object(), object()
+    with util.use_mesh(a):
+        assert calls == [a]
+        with util.use_mesh(b):
+            assert calls == [a, b]
+        # inner exit must re-activate the outer mesh, not leave b active
+        assert calls == [a, b, a]
+    # outermost exit clears the ambient mesh
+    assert calls == [a, b, a, None]
+    assert util._MESH_STACK == []
+
+
 def test_multipod_mesh_axes():
     print(_run("""
         import jax
