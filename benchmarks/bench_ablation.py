@@ -12,7 +12,6 @@ Variants over 100 clients / 6 rounds (oracle-scored like Fig. 3):
 from __future__ import annotations
 
 import time
-from typing import Dict
 
 import numpy as np
 

@@ -21,16 +21,33 @@ On CPU the flat path runs the XLA-fused jnp formulation of the kernel
 (interpret-mode Pallas is a correctness tool, not a perf path) — the
 "CPU-interpret-off jit path". On TPU it runs the Pallas kernel.
 
+The table also reports **quantization error**: per-row vs blockwise
+(``packing.QUANT_BLOCK`` symbols per scale) reconstruction MSE on a
+heavy-tailed synthetic update — the case the paper's precision planner
+creates, where one large leaf shares a row with many small ones and a
+single per-update scale inflates every low-bit client's integer grid.
+
 Usage:  python benchmarks/bench_aggregation.py [--full] [--csv] [--smoke]
 ``--full`` extends the sweep to M = 10M+ parameter models. ``--smoke``
 is the CI mode (scripts/tier1.sh): one tiny config, asserts the 4-bit
-wire-byte bar and packed-vs-f32 aggregate equivalence, exits non-zero on
-violation.
+wire-byte bar (at the default quantization block), packed-vs-f32
+aggregate equivalence, and blockwise MSE <= per-row MSE on the
+heavy-tailed fixture; exits non-zero on violation. Runnable standalone
+(no PYTHONPATH needed — it self-locates ``src/``) or via
+scripts/tier1.sh.
 """
 from __future__ import annotations
 
 import argparse
+import pathlib
+import sys
 import time
+
+try:
+    import repro  # noqa: F401  (importability probe)
+except ImportError:  # standalone invocation: put <repo>/src on sys.path
+    sys.path.insert(
+        0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
 import jax
 import jax.numpy as jnp
@@ -61,10 +78,15 @@ def _bits(K: int):
     return [(4, 8, 8, 16, 32)[i % 5] for i in range(K)]
 
 
-def _make_rows(X, bits, key):
-    """Quantize+bit-pack every client row at the edge (the wire format)."""
+def _make_rows(X, bits, key, block: int = 0):
+    """Quantize+bit-pack every client row at the edge (the wire format).
+
+    ``block`` > 0 ships blockwise scales (one per ``block`` symbols);
+    0 = the per-update scale.
+    """
     sr = ota.derive_sr_seed(key)
-    rows = [ota.quantize_uplink(X[i], b, sr, i) for i, b in enumerate(bits)]
+    rows = [ota.quantize_uplink(X[i], b, sr, i, block=block)
+            for i, b in enumerate(bits)]
     jax.block_until_ready([r.data for r in rows])
     return rows
 
@@ -124,23 +146,71 @@ def bench_pair(K: int, M: int, reps: int = 3, legacy_reps: int = 1,
     return legacy_s, flat_s, packed_s, wire_ratio, legacy_s / flat_s
 
 
-def bench_4bit_wire(K: int = 8, M: int = 1 << 17) -> float:
+def bench_4bit_wire(K: int = 8, M: int = 1 << 17, block: int = 0) -> float:
     """Pure-4-bit cohort bytes-on-wire ratio vs the f32 rows it replaces.
 
     This is the acceptance measurement: int4 packs two symbols per byte
-    plus one f32 scale per row, so the ratio lands at ~1/8 and must stay
-    <= 1/7.
+    plus f32 scales (one per update, or one per ``block`` symbols for
+    blockwise rows — +4 bytes/block), so the ratio lands at ~1/8 per-row
+    and ~1/8 + 1/block blockwise, and must stay <= 1/7 at the default
+    ``packing.QUANT_BLOCK``.
     """
     ups = [_tree_of(M, seed=i) for i in range(K)]
     layout = packing.make_layout(ups[0])
     X = packing.pack_batch(ups, layout)
-    rows = _make_rows(X, [4] * K, jax.random.key(0))
+    rows = _make_rows(X, [4] * K, jax.random.key(0), block=block)
     wire = sum(r.wire_nbytes for r in rows)
     f32 = 4 * layout.padded_size * K
-    print(f"4-bit cohort (K={K}, M={M}): {wire} bytes on wire vs "
-          f"{f32} f32 bytes -> ratio {wire / f32:.4f} "
-          f"(bar: <= {1 / 7:.4f})")
+    print(f"4-bit cohort (K={K}, M={M}, block={block or 'per-row'}): "
+          f"{wire} bytes on wire vs {f32} f32 bytes -> "
+          f"ratio {wire / f32:.4f} (bar: <= {1 / 7:.4f})")
     return wire / f32
+
+
+def _heavy_tailed_row(M: int, seed: int = 0) -> jnp.ndarray:
+    """Synthetic flat update with heterogeneous leaf magnitudes.
+
+    Six equal runs ("leaves") at stds spanning 1e-3..10 — the mixed-
+    precision failure mode where the largest leaf sets the per-update
+    scale and the small leaves lose all their int4 resolution.
+    """
+    rng = np.random.RandomState(seed)
+    stds = [1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 10.0]
+    n = M // len(stds)
+    sizes = [n] * (len(stds) - 1) + [M - n * (len(stds) - 1)]
+    runs = [rng.randn(sz) * s for sz, s in zip(sizes, stds)]
+    return jnp.asarray(np.concatenate(runs).astype(np.float32))
+
+
+def quant_error_report(M: int = 1 << 16,
+                       block: int = packing.QUANT_BLOCK):
+    """Per-row vs blockwise reconstruction MSE on the heavy-tailed row.
+
+    Returns {bits: (per_row_mse, blockwise_mse)} and prints the table;
+    the blockwise column must dominate (<=) per-row — smoke() asserts
+    it. This is the accuracy half of the +4 bytes/block trade.
+    """
+    tree = {"w": _heavy_tailed_row(M)}
+    layout = packing.make_layout(tree)
+    flat = packing.pack(tree, layout)
+    sr = ota.derive_sr_seed(jax.random.key(1))
+    out = {}
+    print(f"quantization error, heavy-tailed update (M={M}, "
+          f"block={block}):")
+    print(f"{'bits':>5} {'per_row_mse':>12} {'block_mse':>12} {'gain':>6}")
+    for bits in (4, 8):
+        per = ota.quantize_uplink(flat, bits, sr, 0)
+        blk = ota.quantize_uplink(flat, bits, sr, 0, block=block)
+        e_per = float(jnp.mean(
+            (ota.dequantize_uplink(per, layout.size) - flat[:layout.size])
+            ** 2))
+        e_blk = float(jnp.mean(
+            (ota.dequantize_uplink(blk, layout.size) - flat[:layout.size])
+            ** 2))
+        out[bits] = (e_per, e_blk)
+        print(f"{bits:>5} {e_per:>12.3e} {e_blk:>12.3e} "
+              f"{e_per / max(e_blk, 1e-30):>5.1f}x")
+    return out
 
 
 def smoke() -> int:
@@ -160,10 +230,24 @@ def smoke() -> int:
     for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(packed)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-4, atol=1e-5)
-    ratio = bench_4bit_wire(K=4, M=M)
+    # blockwise cohort (the FL default) still aggregates, kernel == oracle
+    brows = _make_rows(X, bits, key, block=packing.QUANT_BLOCK)
+    b_jnp, binfo = ota.ota_aggregate_packed(key, brows, bits, weights,
+                                            layout, cfg)
+    b_ker, _ = ota.ota_aggregate_packed(key, brows, bits, weights, layout,
+                                        cfg, use_kernel=True)
+    for a, b in zip(jax.tree.leaves(b_jnp), jax.tree.leaves(b_ker)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ratio = bench_4bit_wire(K=4, M=M, block=packing.QUANT_BLOCK)
     assert ratio <= 1 / 7, f"4-bit wire ratio {ratio} above 1/7"
-    print(f"smoke OK: packed == f32 aggregate (K={K}, M={M}); mixed-cohort "
-          f"wire bytes {info['uplink_bytes']}/{info['uplink_bytes_f32']}")
+    errs = quant_error_report(M=M)
+    for b, (e_per, e_blk) in errs.items():
+        assert e_blk <= e_per, \
+            f"blockwise MSE {e_blk} above per-row {e_per} at {b} bits"
+    print(f"smoke OK: packed == f32 aggregate, blockwise kernel == oracle "
+          f"(K={K}, M={M}); mixed-cohort wire bytes "
+          f"{info['uplink_bytes']}/{info['uplink_bytes_f32']} per-row, "
+          f"{binfo['uplink_bytes']} blockwise")
     return 0
 
 
@@ -198,6 +282,8 @@ def main():
                   f"{packed_s*1e3:>10.1f} {wire:>6.3f} {speed:>7.1f}x")
     if not args.csv:  # keep --csv output machine-parseable
         bench_4bit_wire()
+        bench_4bit_wire(block=packing.QUANT_BLOCK)
+        quant_error_report()
     return rows
 
 

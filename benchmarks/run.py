@@ -5,7 +5,6 @@ assignment's roofline table. Prints ``name,us_per_call,derived`` CSV.
   PYTHONPATH=src python -m benchmarks.run --quick    # skip FL training
 """
 import argparse
-import sys
 
 
 def main() -> None:

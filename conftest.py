@@ -1,0 +1,15 @@
+"""Make ``repro`` importable without ``PYTHONPATH=src``.
+
+Mirrors the bootstrap in ``benchmarks/bench_aggregation.py`` so pytest, CI,
+and bare local invocations agree on the import path (tier-1 previously
+relied on ``scripts/tier1.sh`` exporting PYTHONPATH; both entry points are
+now self-locating).
+"""
+
+import pathlib
+import sys
+
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent / "src"))

@@ -9,7 +9,7 @@ multi-client slot packing -> quantized model + OTA aggregation.
 import jax
 import jax.numpy as jnp
 
-from repro.core import ota, quant
+from repro.core import ota
 from repro.core.profiling import (RAGPlanner, make_fleet, make_users,
                                   plan_round, satisfaction_score,
                                   true_performance)

@@ -3,6 +3,9 @@
 # smoke (hard-asserted acceptance checks), then the whole suite, stop on
 # first failure. Run from the repo root:  bash scripts/tier1.sh [extra
 # pytest args...]
+# CI (.github/workflows/ci.yml) runs these same three commands. The
+# PYTHONPATH export is belt-and-braces: pytest (conftest.py) and the
+# bench (in-file bootstrap) self-locate src/ when invoked standalone.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -1,1 +1,2 @@
-from repro.ckpt.checkpoint import load_checkpoint, save_checkpoint, CheckpointManager  # noqa: F401
+from repro.ckpt.checkpoint import (CheckpointManager,  # noqa: F401
+                                   load_checkpoint, save_checkpoint)

@@ -8,8 +8,10 @@ live in sibling modules (one file per arch) and register themselves in
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+from repro.core.packing import QUANT_BLOCK
 
 # ---------------------------------------------------------------------------
 # Architecture config
@@ -230,6 +232,10 @@ class FLConfig:
     strategy: str = "fedavg"  # fedavg | class_equal | majority_centric
     planner: str = "rag"  # rag | unified | rag_energy
     snr_db: float = 20.0
+    # uplink quantization block: symbols per wire scale (blockwise
+    # scales, DESIGN.md §6). 0 = one per-update scale (the original
+    # per-row wire format).
+    quant_block: int = QUANT_BLOCK
     seed: int = 0
     # robustness options
     dropout_prob: float = 0.0   # straggler/device dropout per round

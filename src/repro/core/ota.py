@@ -36,11 +36,17 @@ The per-round hot path is one flat, batched, jitted program:
    dither stream and grid semantics: f32 rows run stochastic quantize ->
    dequantize -> weighted superposition (``ota_fused_2d``); packed rows
    arrive pre-quantized and run unpack -> dequant -> superposition per
-   storage class (``ota_packed_2d``). Each client uses a single
-   per-update quant scale — the faithful physical choice: one analog
-   constellation per client per round. The kernel is bits-agnostic
-   (precision enters as (K,) scale/qmax arrays), so one compiled program
-   serves every precision mix and the jit cache keys only on (K, M).
+   storage class (``ota_packed_2d``). The in-pass (f32) quantizer uses
+   a single per-update quant scale — one analog constellation per
+   client per round, the faithful physical choice. Packed wire rows may
+   additionally carry *blockwise* scales (``quantize_uplink`` with
+   ``block`` > 0, DESIGN.md §6): one f32 per ``block`` symbols, indexed
+   in-pass via a (K, n_blocks) scale matrix, so heterogeneous-magnitude
+   updates don't let one outlier leaf inflate the whole row's int grid.
+   The kernel is bits-agnostic (precision enters as (K,) or
+   (K, n_blocks) scale arrays plus (K,) qmax), so one compiled program
+   serves every precision mix and the jit cache keys only on
+   (K, M, n_blocks).
 3. **AWGN epilogue**: the noise std is calibrated to the *global*
    aggregate norm (receive SNR), which only exists after the reduction,
    so the O(M) noise axpy rides the same jitted program right after the
@@ -139,20 +145,53 @@ def derive_sr_seed(key) -> jnp.ndarray:
 
 
 def quantize_uplink(row: jnp.ndarray, bits: int, sr_seed: jnp.ndarray,
-                    row_index: int) -> packing.PackedRow:
+                    row_index: int, *, block: int = 0) -> packing.PackedRow:
     """Modulate one client's flat packed row onto the wire (DESIGN.md §6).
 
     Stochastic-quantizes ``row`` at ``bits`` using the round dither stream
     (``derive_sr_seed``; ``row_index`` = the client's row in this round's
     cohort, counting reporting clients only) and bit-packs the symbols:
     two per byte for 4-bit clients, int8/int16 above, f32 passthrough for
-    unquantized clients. The server dequantizes inside the fused
-    aggregation pass — the f32 row never crosses the uplink.
+    unquantized clients. ``block`` > 0 ships blockwise scales — one f32
+    per ``block`` symbols (``packing.QUANT_BLOCK`` is the FL default;
+    +4 bytes/block on the wire) instead of one per update, so a single
+    outlier leaf no longer inflates the whole row's integer grid; 0
+    keeps the PR-2 per-update scale. The server dequantizes inside the
+    fused aggregation pass — the f32 row never crosses the uplink.
     """
-    q, scale = quant.quantize_row_sr(row, bits, sr_seed, row_index)
+    q, scale = quant.quantize_row_sr(row, bits, sr_seed, row_index,
+                                     block=block)
     if packing.wire_kind(bits) == "int4":
         q = kops.pack_int4_rows(q)
-    return packing.PackedRow(data=q, scale=scale, bits=int(bits))
+    qblock = block if int(jnp.asarray(scale).size) > 1 else 0
+    return packing.PackedRow(data=q, scale=scale, bits=int(bits),
+                             qblock=qblock)
+
+
+def dequantize_uplink(row: packing.PackedRow,
+                      n: Optional[int] = None) -> jnp.ndarray:
+    """Reconstruct the f32 row a ``PackedRow`` encodes (q * scale[block]).
+
+    The simulator's data plane never does this — dequantization lives
+    inside the fused pass — but the quantization-*error* measurements
+    (``benchmarks/bench_aggregation.py``) and the blockwise edge tests
+    need the reconstruction standalone. ``n`` trims to the logical
+    (unpadded) length.
+    """
+    if row.kind == "float32":
+        out = jnp.asarray(row.data, jnp.float32)
+        return out if n is None else out[:n]
+    q = row.data
+    if row.kind == "int4":
+        q = kops.unpack_int4_rows(q)
+    q = q.astype(jnp.float32)
+    scales = jnp.atleast_1d(jnp.asarray(row.scale, jnp.float32))
+    if row.qblock > 0 and scales.shape[0] > 1:
+        bid = jnp.arange(q.shape[0], dtype=jnp.int32) // row.qblock
+        out = q * jnp.take(scales, bid, mode="clip")
+    else:
+        out = q * scales[0]
+    return out if n is None else out[:n]
 
 
 @functools.partial(jax.jit,
@@ -216,40 +255,46 @@ def _awgn_epilogue(key, acc, *, cfg: OTAConfig, n_valid: int):
     return y, noise_std
 
 
-_packed_ref_jit = jax.jit(kref.ota_packed_ref, static_argnames=("packed4",))
+_packed_ref_jit = jax.jit(kref.ota_packed_ref,
+                          static_argnames=("qblock", "packed4"))
 
 
 def _aggregate_rows_flat(key, datas, scales, perm, weights, *,
-                         kinds: Tuple[str, ...], cfg: OTAConfig,
+                         kinds: Tuple[Tuple[str, int], ...],
+                         cfg: OTAConfig,
                          n_valid: int, use_kernel: bool = False):
     """Aggregate packed uplink rows grouped by wire storage class.
 
-    datas/scales: per-kind stacked (Kg, ...) symbol matrices and (Kg,)
-    quant scales, ordered per ``kinds``; ``perm`` maps group order back to
-    the cohort's original row order (weights/channel stay in cohort
-    order). One fused dequant->superpose pass per storage group
-    (``kernels.ota_packed_2d`` / ``ref.ota_packed_ref``), then the shared
-    AWGN epilogue on the combined aggregate — same channel, weight
-    renormalisation, and noise-draw semantics as ``ota_aggregate_flat``.
+    datas/scales: per-group stacked (Kg, ...) symbol matrices and
+    (Kg, n_blocks) quant-scale matrices, ordered per ``kinds`` — a tuple
+    of (storage class, qblock) group keys (qblock = 0: per-update
+    scales); ``perm`` maps group order back to the cohort's original row
+    order (weights/channel stay in cohort order). One fused
+    dequant->superpose pass per storage group (``kernels.ota_packed_2d``
+    / ``ref.ota_packed_ref``), then the shared AWGN epilogue on the
+    combined aggregate — same channel, weight renormalisation, and
+    noise-draw semantics as ``ota_aggregate_flat``.
 
     Deliberately NOT one jitted program: the group composition (which
     kinds, how many rows each) changes round to round with the planner's
     bit decisions and dropouts, and a composition-keyed jit would retrace
     per distinct mix. Instead the pieces are jitted on small key spaces —
-    channel on K, each group pass on (Kg, kind), epilogue on (M, n_valid)
-    — so a varying cohort reuses compiled code across rounds.
+    channel on K, each group pass on (Kg, kind, qblock), epilogue on
+    (M, n_valid) — so a varying cohort reuses compiled code across
+    rounds.
     """
     habs, participate, w = _round_channel(key, weights, cfg=cfg)
     wg = w[perm]  # group-order view of the cohort weights
 
     acc = None
     off = 0
-    for kind, data, scale in zip(kinds, datas, scales):
+    for (kind, qblock), data, scale in zip(kinds, datas, scales):
         kg = scale.shape[0]
         wseg = jax.lax.slice_in_dim(wg, off, off + kg)
         off += kg
         fn = kops.ota_dequant_superpose if use_kernel else _packed_ref_jit
-        part = fn(data, scale, wseg, packed4=(kind == "int4"))
+        part = fn(data, scale, wseg, qblock=qblock,
+                  packed4=(kind == "int4"))
         acc = part if acc is None else acc + part
 
     y, noise_std = _awgn_epilogue(key, acc, cfg=cfg, n_valid=n_valid)
@@ -257,17 +302,27 @@ def _aggregate_rows_flat(key, datas, scales, perm, weights, *,
 
 
 def _group_rows(rows: Sequence[packing.PackedRow]):
-    """Stable-sort rows by storage class -> (kinds, datas, scales, perm)."""
-    order = sorted(range(len(rows)),
-                   key=lambda i: packing.KIND_RANK[rows[i].kind])
+    """Stable-sort rows by (storage class, qblock) -> groups.
+
+    Returns (kinds, datas, scales, perm) where kinds is a tuple of
+    (kind, qblock) keys. Rows sharing a storage class but quantized with
+    different block sizes (a mixed-planner round) land in separate
+    groups — their (Kg, n_blocks) scale matrices have different widths,
+    and each group's fused pass gets its own static qblock.
+    """
+    def _key(i):
+        return (packing.KIND_RANK[rows[i].kind], rows[i].qblock)
+
+    order = sorted(range(len(rows)), key=_key)
     kinds, datas, scales, perm = [], [], [], []
     i = 0
     while i < len(order):
-        kind = rows[order[i]].kind
-        grp = [j for j in order[i:] if rows[j].kind == kind]
-        kinds.append(kind)
+        kind, qblock = rows[order[i]].kind, rows[order[i]].qblock
+        grp = [j for j in order[i:] if _key(j) == _key(order[i])]
+        kinds.append((kind, qblock))
         datas.append(jnp.stack([rows[j].data for j in grp]))
-        scales.append(jnp.stack([rows[j].scale for j in grp]))
+        scales.append(jnp.stack(
+            [jnp.atleast_1d(jnp.asarray(rows[j].scale)) for j in grp]))
         perm.extend(grp)
         i += len(grp)
     return (tuple(kinds), tuple(datas), tuple(scales),
@@ -433,7 +488,8 @@ def ota_aggregate_pertree(
         habs, participate, noise_std)
 
 
-def channel_uses(bits: Sequence[int], n_params: int, cfg: OTAConfig = OTAConfig()) -> int:
+def channel_uses(bits: Sequence[int], n_params: int,
+                 cfg: OTAConfig = OTAConfig()) -> int:
     """OTA channel uses for one aggregation round.
 
     Mixed-precision modulation shares symbols across precisions: the round

@@ -35,6 +35,13 @@ Pytree = Any
 # fused aggregation kernel's (K, block) grid with no second padding pass.
 DEFAULT_BLOCK = 2048
 
+# Default *quantization* block for blockwise uplink scales (DESIGN.md §6):
+# symbols per scale on the wire. Distinct from DEFAULT_BLOCK (the lane-pad
+# granularity of the flat layout). 256 symbols/scale costs +4 bytes per
+# 256 symbols — for int4 that is 1/64 of the symbol bytes — while capping
+# how far one outlier leaf can inflate the shared integer grid.
+QUANT_BLOCK = 256
+
 
 @dataclasses.dataclass(frozen=True)
 class Layout:
@@ -91,19 +98,30 @@ def wire_kind(bits: int) -> str:
 KIND_RANK = {"int4": 0, "int8": 1, "int16": 2, "int32": 3, "float32": 4}
 
 
-def row_wire_bytes(bits: int, padded_size: int) -> int:
+def n_scale_blocks(block: int, padded_size: int) -> int:
+    """Scales a blockwise row ships: ceil(M / block); 1 when per-row."""
+    if block <= 0 or block >= padded_size:
+        return 1
+    return -(-padded_size // block)
+
+
+def row_wire_bytes(bits: int, padded_size: int, block: int = 0) -> int:
     """Bytes one client's packed row occupies on the wire.
 
-    Quantized rows carry their symbols plus one f32 per-update scale;
-    the f32 passthrough row is just the symbols.
+    Quantized rows carry their symbols plus one f32 scale per
+    quantization block — ``block`` = 0 (per-row, the PR-2 format) ships
+    exactly one; blockwise ships ceil(padded_size / block), i.e.
+    +4 bytes per ``block`` symbols. The f32 passthrough row is just the
+    symbols.
     """
     kind = wire_kind(bits)
     if kind == "float32":
         return 4 * padded_size
+    nscales = n_scale_blocks(block, padded_size)
     if kind == "int4":  # two symbols per byte, odd length rounds up
-        return (padded_size + 1) // 2 + 4  # + the () f32 scale
+        return (padded_size + 1) // 2 + 4 * nscales
     per = {"int8": 1, "int16": 2, "int32": 4}[kind]
-    return per * padded_size + 4
+    return per * padded_size + 4 * nscales
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,25 +132,35 @@ class PackedRow:
     byte, ``kernels.ops.pack_int4_rows``), (padded_size,) int8/int16/
     int32 for 5..8 / 9..16 / 17..31 bits, or the (padded_size,) f32 row
     for an unquantized client (bits >= 32, or <= 1 where the symmetric
-    grid is empty). scale is the () f32 per-update analog grid step (1 for f32
-    rows); bits the planned precision. Dequantization (q * scale) happens
-    inside the fused aggregation pass (``kernels/ota_fused.ota_packed_2d``
-    / ``kernels/ref.ota_packed_ref``) — the f32 row never exists between
+    grid is empty). scale is the f32 analog grid step: the () per-update
+    scalar of the PR-2 format (the ``qblock`` = 0 degenerate case — old
+    rows parse unchanged), or an (n_blocks,) vector of per-block scales
+    where symbol position p belongs to block p // qblock (last block
+    ragged over the zero-pad region). 1 for f32 rows. bits is the
+    planned precision. Dequantization (q * scale[block]) happens inside
+    the fused aggregation pass (``kernels/ota_fused.ota_packed_2d`` /
+    ``kernels/ref.ota_packed_ref``) — the f32 row never exists between
     client and server.
     """
 
     data: jnp.ndarray
     scale: jnp.ndarray
     bits: int
+    qblock: int = 0  # symbols per scale block; 0 = one per-update scale
 
     @property
     def kind(self) -> str:
         return wire_kind(self.bits)
 
     @property
+    def n_scales(self) -> int:
+        """Scale entries on the wire (1 for the per-row format)."""
+        return max(int(jnp.asarray(self.scale).size), 1)
+
+    @property
     def wire_nbytes(self) -> int:
         n = int(self.data.size) * jnp.dtype(self.data.dtype).itemsize
-        return n if self.kind == "float32" else n + 4
+        return n if self.kind == "float32" else n + 4 * self.n_scales
 
 
 def is_packed_rows(x: Any) -> bool:

@@ -15,8 +15,7 @@ sharpens as feedback accumulates.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence
 
 from repro.configs.base import BITS_TO_LEVEL
 from repro.core.profiling.hardware import DeviceSpec

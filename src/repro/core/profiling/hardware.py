@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 DEVICE_CLASSES: Dict[str, Dict] = {
     # cpu_gflops ~ sustained fp32; energy_per_mac_pj at 32-bit
@@ -72,7 +72,8 @@ def make_fleet(n: int, seed: int = 0) -> List[DeviceSpec]:
     for i in range(n):
         cls = rng.choices(classes, probs)[0]
         base = DEVICE_CLASSES[cls]
-        jitter = lambda v: v * rng.uniform(0.85, 1.15)
+        def jitter(v):
+            return v * rng.uniform(0.85, 1.15)
         fleet.append(DeviceSpec(
             device_id=i,
             device_class=cls,

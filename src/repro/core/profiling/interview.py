@@ -211,7 +211,8 @@ class InterviewAgent:
     def _utterance(self, user: UserTruth) -> str:
         rng = self.rng
         parts: List[str] = []
-        reveal = lambda: rng.random() < user.chattiness
+        def reveal():
+            return rng.random() < user.chattiness
         if reveal():
             parts.append(rng.choice(LOCATION_PHRASES[user.location]))
         if reveal():

@@ -19,7 +19,7 @@ the precision slots that maximise mixed-precision OTA utilization.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence
 
 from repro.core.profiling.evaluator import (ScoredLevel, evaluate_levels,
                                             select_level)

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -61,7 +61,8 @@ class VectorStore:
         self._records.append(Record(features, payload))
         self._matrix = None  # invalidate
 
-    def query(self, features: Dict[str, float], k: int = 8) -> List[Tuple[float, Record]]:
+    def query(self, features: Dict[str, float],
+              k: int = 8) -> List[Tuple[float, Record]]:
         if not self._records:
             return []
         if self._matrix is None:

@@ -13,11 +13,10 @@ and the TRUE context-modulated performance at the assigned precision.
 from __future__ import annotations
 
 import dataclasses
-import math
 import random
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List
 
-from repro.configs.base import BITS_TO_LEVEL, PrecisionLevel
+from repro.configs.base import BITS_TO_LEVEL
 from repro.core.profiling.hardware import DeviceSpec
 
 LOCATIONS = ["bedroom", "living_room", "kitchen", "office", "outdoor"]

@@ -13,7 +13,7 @@ against these (see kernels/*/ref.py which re-export from here).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,9 +72,9 @@ _STORAGE_DTYPE = {"int4": jnp.int8, "int8": jnp.int8,
                   "int16": jnp.int16, "int32": jnp.int32}
 
 
-@functools.partial(jax.jit, static_argnames=("bits",))
+@functools.partial(jax.jit, static_argnames=("bits", "block"))
 def quantize_row_sr(row: jnp.ndarray, bits: int, sr_seed: jnp.ndarray,
-                    row_index: jnp.ndarray):
+                    row_index: jnp.ndarray, block: int = 0):
     """Client-side uplink quantization of one flat packed row.
 
     Stochastic rounding driven by the OTA data plane's positional dither
@@ -89,6 +89,17 @@ def quantize_row_sr(row: jnp.ndarray, bits: int, sr_seed: jnp.ndarray,
     instead of dividing by zero. Zero padding quantizes to exact
     integer 0 (frac = 0 and the dither is strictly < 1), so packed rows
     keep the exact-zero pad region the aggregate norm relies on.
+
+    ``block`` > 0 switches to **blockwise scales** (DESIGN.md §6): the
+    row is split into ceil(M / block)-many runs of ``block`` symbols
+    (last one ragged — the zero pad region simply falls into it), each
+    with its own symmetric amax-derived scale, and ``scale`` comes back
+    as an (n_blocks,) f32 vector. One outlier leaf then inflates only
+    its own block's int grid instead of the whole row's. ``block`` <= 0
+    or >= M is the per-row degenerate case: scale stays the () scalar of
+    the PR-2 wire format (old rows parse unchanged) and the symbols are
+    bit-identical to the in-pass quantizer. The dither is positional, so
+    the block structure never perturbs the rounding stream.
     """
     from repro.core.packing import wire_kind
     from repro.kernels.ota_fused import sr_dither
@@ -98,12 +109,22 @@ def quantize_row_sr(row: jnp.ndarray, bits: int, sr_seed: jnp.ndarray,
     if kind == "float32":
         return row, jnp.ones((), jnp.float32)
     qmax = jnp.exp2(jnp.float32(bits - 1)) - 1.0  # == qrange(bits), f32
-    amax = jnp.max(jnp.abs(row))
-    scale = jnp.maximum(amax, 1e-12) / qmax
-    pos = jnp.arange(row.shape[0], dtype=jnp.uint32)
+    M = row.shape[0]
+    if 0 < block < M:
+        n_blocks = -(-M // block)
+        pad = n_blocks * block - M
+        padded = jnp.pad(row, (0, pad)) if pad else row
+        amax = jnp.max(jnp.abs(padded.reshape(n_blocks, block)), axis=1)
+        scale = jnp.maximum(amax, 1e-12) / qmax        # (n_blocks,)
+        scale_cols = jnp.repeat(scale, block)[:M]
+    else:
+        amax = jnp.max(jnp.abs(row))
+        scale = jnp.maximum(amax, 1e-12) / qmax        # ()
+        scale_cols = scale
+    pos = jnp.arange(M, dtype=jnp.uint32)
     u = sr_dither(jnp.asarray(sr_seed, jnp.uint32),
                   jnp.asarray(row_index, jnp.uint32), pos)
-    scaled = row / scale
+    scaled = row / scale_cols
     floor = jnp.floor(scaled)
     q = floor + (u < (scaled - floor)).astype(jnp.float32)
     q = jnp.clip(q, -qmax, qmax)

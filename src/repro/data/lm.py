@@ -7,7 +7,7 @@ host-side prefetch semantics (numpy generation, device put by the caller).
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -15,14 +15,12 @@ byte + one f32 scale, 1/8 the f32 row (DESIGN.md §6).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig
 from repro.core import packing
 from repro.core.profiling.hardware import DeviceSpec
 from repro.core.profiling.users import UserTruth
@@ -62,6 +60,7 @@ class FLClient:
         seed: int = 0, max_frames: int = 320, max_labels: int = 40,
         fedprox_mu: float = 0.0, layout: Optional[packing.Layout] = None,
         sr_seed: Optional[jnp.ndarray] = None, uplink_row: int = 0,
+        quant_block: int = 0,
     ) -> Tuple[Any, Dict[str, float]]:
         """Run local steps; return (delta, metrics).
 
@@ -71,8 +70,11 @@ class FLClient:
         ``uplink_row`` = this client's row in the round cohort), delta is
         the quantized+bit-packed wire row (``packing.PackedRow``) — the
         client modulates its own uplink, at ``bits``, and only
-        sub-byte-packed symbols plus one scale cross to the server.
-        Without ``layout``: the parameter-delta pytree (legacy shape).
+        sub-byte-packed symbols plus the scale vector cross to the
+        server. ``quant_block`` > 0 quantizes with blockwise scales (one
+        f32 per ``quant_block`` symbols, the round config's
+        ``FLConfig.quant_block``; 0 = one per-update scale). Without
+        ``layout``: the parameter-delta pytree (legacy shape).
         """
         jitted, opt = self._step_fn(bits, lr, fedprox_mu)
         state = {"params": global_params, "opt": opt.init(global_params),
@@ -99,6 +101,6 @@ class FLClient:
                 from repro.core import ota
 
                 delta = ota.quantize_uplink(delta, bits, sr_seed,
-                                            uplink_row)
+                                            uplink_row, block=quant_block)
         return delta, {"loss_first": losses[0], "loss_last": losses[-1],
                        "n_samples": len(utts)}

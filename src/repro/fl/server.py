@@ -5,8 +5,7 @@ aggregation, and per-round feedback collection into the RAG databases.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,18 +13,16 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, FLConfig, get_arch
 from repro.core import ota, packing
-from repro.core.profiling.hardware import DeviceSpec, make_fleet
-from repro.core.profiling.planner import (BasePlanner, PlanDecision,
-                                          RAGPlanner, UnifiedTierPlanner,
-                                          plan_round)
-from repro.core.profiling.users import (UserTruth, drift_device, drift_user,
-                                        make_users, satisfaction_score,
-                                        true_performance)
-from repro.data.voice import (ClientShard, Utterance, batchify,
-                              make_client_shard, make_eval_set)
+from repro.core.profiling.hardware import make_fleet
+from repro.core.profiling.planner import (BasePlanner, RAGPlanner,
+                                          UnifiedTierPlanner, plan_round)
+from repro.core.profiling.users import (drift_device, drift_user, make_users,
+                                        satisfaction_score, true_performance)
+from repro.data.voice import (Utterance, batchify, make_client_shard,
+                              make_eval_set)
 from repro.fl.client import FLClient
 from repro.models.deepspeech2 import ds2_greedy_decode
-from repro.models.registry import Model, build_model
+from repro.models.registry import build_model
 
 Pytree = Any
 
@@ -119,7 +116,8 @@ class FLServer:
                 local_batch=self.cfg.local_batch,
                 lr=self.cfg.lr, seed=self.cfg.seed * 97 + rnd,
                 fedprox_mu=self.cfg.fedprox_mu, layout=self.layout,
-                sr_seed=sr_seed, uplink_row=len(deltas))
+                sr_seed=sr_seed, uplink_row=len(deltas),
+                quant_block=self.cfg.quant_block)
             deltas.append(delta)
             # FedAvg weight = samples x estimated contribution C_q (the
             # strategy's lever: class-equal upweights minority-rich

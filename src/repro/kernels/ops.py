@@ -93,15 +93,18 @@ def ota_quantize_superpose(x: jnp.ndarray, scale: jnp.ndarray,
     return acc[:M], ss.reshape(())
 
 
-@functools.partial(jax.jit, static_argnames=("packed4",))
+@functools.partial(jax.jit, static_argnames=("qblock", "packed4"))
 def ota_dequant_superpose(q: jnp.ndarray, scale: jnp.ndarray,
-                          w: jnp.ndarray, *, packed4: bool = False):
+                          w: jnp.ndarray, *, qblock: int = 0,
+                          packed4: bool = False):
     """Receiver half of the packed uplink: dequant + weighted superpose.
 
     q: (K, M) int8/int16/f32 pre-quantized client symbols, or (K, M//2)
     uint8 row-major int4 nibbles when ``packed4`` (``pack_int4_rows``).
-    scale/w: (K,). Returns the (M,) f32 partial aggregate for this
-    storage group. The stochastic quantization happened client-side
+    scale: (K,) per-update scales or the (K, n_blocks) blockwise scale
+    matrix (``qblock`` symbols per scale; 0 = per-update). w: (K,).
+    Returns the (M,) f32 partial aggregate for this storage group. The
+    stochastic quantization happened client-side
     (``core.quant.quantize_row_sr``); this pass never materialises the
     f32 (K, M) matrix — the unpack runs inside the kernel tile. Oracle:
     ``ref.ota_packed_ref``. Interpret mode off-TPU (CPU correctness tool;
@@ -111,8 +114,8 @@ def ota_dequant_superpose(q: jnp.ndarray, scale: jnp.ndarray,
     bc = _otaf.BLOCK_COLS // 2 if packed4 else _otaf.BLOCK_COLS
     M = 2 * q.shape[1] if packed4 else q.shape[1]
     qp, _ = _pad_to(q, bc, axis=1)
-    out = _otaf.ota_packed_2d(qp, scale, w, packed4=packed4,
-                              interpret=interpret)
+    out = _otaf.ota_packed_2d(qp, scale, w, qblock=qblock,
+                              packed4=packed4, interpret=interpret)
     return out[:M]
 
 

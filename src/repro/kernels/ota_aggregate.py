@@ -12,7 +12,6 @@ HBM round-trip over the two-op jnp formulation.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -42,6 +42,8 @@ only work left outside the single O(K*M) pass.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -116,38 +118,82 @@ def _unpack_nibbles(p: jnp.ndarray) -> jnp.ndarray:
                                                 2 * p.shape[-1])
 
 
-def _dq_superpose_kernel(scale_ref, w_ref, q_ref, o_ref):
+def _tile_scale_cols(scale_ref, i, K, B, qblock, aligned):
+    """Per-column dequant scales for grid step ``i``'s (K, B) symbol tile.
+
+    ``aligned`` (qblock divides the logical tile width — true for every
+    power-of-two block <= BLOCK_COLS, incl. the 256 default): scale_ref
+    is the (K, B // qblock) slice of the scale matrix this tile owns,
+    streamed per grid step by its BlockSpec exactly like the symbol
+    tile, and expanded by a static repeat — VMEM stays O(K * B/qblock)
+    no matter how large M grows (at M = 16M the full matrix would be
+    K * 256 KB, which does NOT fit VMEM resident). Unaligned block
+    sizes fall back to the whole (K, n_blocks) matrix resident + a
+    positional gather (fine for the small/ragged cases that produce
+    them). ``qblock`` = 0 means one per-update scale (n_blocks = 1):
+    the (K, 1) column broadcasts with no gather — the PR-2 path,
+    bit-exact. Positions past the last block (lane padding) clip to it
+    in the gather and read padded 1.0 scales in the aligned path;
+    padding symbols are exact zeros so the value there is irrelevant.
+    """
+    scales = scale_ref[...].astype(jnp.float32)
+    if qblock <= 0 or (not aligned and scales.shape[1] == 1):
+        return scales  # (K, 1) broadcast — per-row degenerate case
+    if aligned:
+        return jnp.repeat(scales, qblock, axis=1)  # (K, B), static
+    # 2D iota (TPU requires >= 2D), flattened for the axis-1 gather
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, B), 1).reshape(B) + i * B
+    return jnp.take(scales, pos // qblock, axis=1, mode="clip")
+
+
+def _dq_superpose_kernel(scale_ref, w_ref, q_ref, o_ref, *, qblock=0,
+                         aligned=False):
     """Dequantize pre-quantized rows and superpose: acc = sum_k w_k s_k q_k.
 
     q_ref: (K, B) int8/int16/f32 tile — client-side quantized symbols (or
     f32 passthrough rows with scale 1). The stochastic rounding already
     happened at the client (core.quant.quantize_row_sr), so unlike
     ``_fused_kernel`` there is no dither here — just the receiver-side
-    dequant+reduction over the packed wire format.
+    dequant+reduction over the packed wire format. scale_ref: this
+    tile's slice of the blockwise scale matrix (``_tile_scale_cols``;
+    n_blocks = 1: per-update).
     """
-    dq = q_ref[...].astype(jnp.float32) * scale_ref[...].astype(jnp.float32)
+    i = pl.program_id(0)
+    K, B = q_ref.shape
+    scale = _tile_scale_cols(scale_ref, i, K, B, qblock, aligned)
+    dq = q_ref[...].astype(jnp.float32) * scale
     o_ref[...] = jnp.sum(dq * w_ref[...].astype(jnp.float32),
                          axis=0).reshape(o_ref.shape)
 
 
-def _dq_superpose_int4_kernel(scale_ref, w_ref, p_ref, o_ref):
+def _dq_superpose_int4_kernel(scale_ref, w_ref, p_ref, o_ref, *, qblock=0,
+                              aligned=False):
     """int4 variant: unpack two symbols per byte in-VMEM, then dequant+sum.
 
     p_ref: (K, B//2) uint8 tile of row-major packed nibbles; the HBM read
-    for a 4-bit cohort is 1/8 of the f32 path.
+    for a 4-bit cohort is 1/8 of the f32 path. Block ids index *symbol*
+    positions (two per packed byte), so the scale expansion happens
+    after the in-VMEM unpack.
     """
+    i = pl.program_id(0)
     q = _unpack_nibbles(p_ref[...])
-    dq = q.astype(jnp.float32) * scale_ref[...].astype(jnp.float32)
+    K, B = q.shape
+    scale = _tile_scale_cols(scale_ref, i, K, B, qblock, aligned)
+    dq = q.astype(jnp.float32) * scale
     o_ref[...] = jnp.sum(dq * w_ref[...].astype(jnp.float32),
                          axis=0).reshape(o_ref.shape)
 
 
 def ota_packed_2d(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
-                  packed4: bool = False, interpret: bool = False):
+                  qblock: int = 0, packed4: bool = False,
+                  interpret: bool = False):
     """Dequant + weighted superpose of quantized client rows.
 
     q: (K, M) int8/int16/f32 symbols, or (K, M//2) uint8 when ``packed4``
-    (row-major int4 nibbles; logical M = 2 * q.shape[1]). scale/w: (K,).
+    (row-major int4 nibbles; logical M = 2 * q.shape[1]). scale: (K,) or
+    (K, 1) per-update scales, or the (K, n_blocks) blockwise scale
+    matrix with ``qblock`` symbols per block (``core/quant.
+    quantize_row_sr`` with block = qblock; last block ragged). w: (K,).
     Returns the (M,) f32 partial aggregate for this storage group; the
     caller combines groups and computes the AWGN power on the total
     (see core/ota.py).
@@ -156,17 +202,39 @@ def ota_packed_2d(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
     bc = BLOCK_COLS // 2 if packed4 else BLOCK_COLS
     assert cols % bc == 0, (cols, bc)
     M = 2 * cols if packed4 else cols
+    scales = jnp.asarray(scale, jnp.float32)
+    if scales.ndim == 1:
+        scales = scales.reshape(K, 1)
+    n_blocks = scales.shape[1]
     grid = (cols // bc,)
     col = pl.BlockSpec((K, 1), lambda i: (0, 0))
     tile = pl.BlockSpec((K, bc), lambda i: (0, i))
+    # Scale streaming: when qblock divides the logical tile width (every
+    # power-of-two block size <= BLOCK_COLS, incl. the 256 default), each
+    # grid step owns a contiguous (K, BLOCK_COLS/qblock) scale slice — a
+    # streamed BlockSpec, VMEM-safe at any M. The scale matrix is padded
+    # with 1.0 to the grid's block count (lane padding symbols are exact
+    # zeros, so the scale value multiplied there never shows). Unaligned
+    # sizes keep the whole matrix resident + in-kernel gather.
+    aligned = qblock > 0 and n_blocks > 1 and BLOCK_COLS % qblock == 0
+    if aligned:
+        bpt = BLOCK_COLS // qblock  # blocks per tile
+        need = grid[0] * bpt
+        if n_blocks < need:
+            scales = jnp.pad(scales, ((0, 0), (0, need - n_blocks)),
+                             constant_values=1.0)
+        smat = pl.BlockSpec((K, bpt), lambda i: (0, i))
+    else:
+        smat = pl.BlockSpec((K, n_blocks), lambda i: (0, 0))
+    body = _dq_superpose_int4_kernel if packed4 else _dq_superpose_kernel
     return pl.pallas_call(
-        _dq_superpose_int4_kernel if packed4 else _dq_superpose_kernel,
+        functools.partial(body, qblock=qblock, aligned=aligned),
         grid=grid,
-        in_specs=[col, col, tile],
+        in_specs=[smat, col, tile],
         out_specs=pl.BlockSpec((BLOCK_COLS,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((M,), jnp.float32),
         interpret=interpret,
-    )(scale.reshape(K, 1).astype(jnp.float32),
+    )(scales,
       w.reshape(K, 1).astype(jnp.float32),
       q)
 

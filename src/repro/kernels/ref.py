@@ -5,7 +5,7 @@ re-exports *are* the reference the kernels are tested against.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,20 +61,33 @@ def ota_fused_ref(x: jnp.ndarray, scale: jnp.ndarray, qmax: jnp.ndarray,
 
 
 def ota_packed_ref(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
-                   packed4: bool = False) -> jnp.ndarray:
+                   qblock: int = 0, packed4: bool = False) -> jnp.ndarray:
     """Oracle for the packed-uplink dequant+superpose kernel
     (``ota_fused.ota_packed_2d``).
 
     q: (K, M) int8/int16/f32 symbols, or (K, M//2) uint8 row-major int4
-    nibbles when ``packed4``. scale/w: (K,). Returns the (M,) f32 partial
-    aggregate sum_k w_k * scale_k * q_k. Uses the same nibble unpack as
-    the kernel body so the two are bit-equal per storage group.
+    nibbles when ``packed4``. scale: (K,)/(K, 1) per-update scales, or
+    the (K, n_blocks) blockwise scale matrix — symbol position p
+    dequantizes with block p // qblock (``qblock`` = 0 or n_blocks = 1:
+    one scale per update, the PR-2 format). w: (K,). Returns the (M,)
+    f32 partial aggregate sum_k w_k * scale_k[block] * q_k. Uses the
+    same nibble unpack and per-column scale gather as the kernel body so
+    the two are bit-equal per storage group.
     """
     if packed4:
         from repro.kernels.ota_fused import _unpack_nibbles
 
         q = _unpack_nibbles(q)
-    dq = q.astype(jnp.float32) * scale.reshape(-1, 1).astype(jnp.float32)
+    K, M = q.shape
+    scales = jnp.asarray(scale, jnp.float32)
+    if scales.ndim == 1:
+        scales = scales.reshape(K, 1)
+    if qblock > 0 and scales.shape[1] > 1:
+        bid = jnp.arange(M, dtype=jnp.int32) // qblock
+        scale_cols = jnp.take(scales, bid, axis=1, mode="clip")
+    else:
+        scale_cols = scales  # (K, 1) broadcast
+    dq = q.astype(jnp.float32) * scale_cols
     return jnp.sum(dq * w.reshape(-1, 1).astype(jnp.float32), axis=0)
 
 

@@ -26,12 +26,12 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape, get_arch
 from repro.launch import sharding as shd
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
-from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step, train_state_shapes
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step, train_state_shapes)
 from repro.models.registry import build_model
 from repro.optim import adamw
 
@@ -45,7 +45,9 @@ _DTYPE_BYTES = {
     "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
 }
 
-_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32"
+    r"|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
@@ -67,7 +69,8 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
         # HLO: `%name = TYPE[SHAPE] all-gather(...)` or fusion-wrapped
         m = None
         for c in _COLLECTIVES:
-            if f" {c}(" in stripped or f"={c}(" in stripped or stripped.startswith(c + "("):
+            if (f" {c}(" in stripped or f"={c}(" in stripped
+                    or stripped.startswith(c + "(")):
                 m = c
                 break
             if f" {c}-start(" in stripped or f" {c}-done(" in stripped:
@@ -75,8 +78,7 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
                 break
         if m is None:
             continue
-        # take the shapes on the lhs (result) — for tuples, sum all
-        lhs = stripped.split("=", 1)[0] if "=" in stripped else ""
+        # take the shapes on the rhs — for tuples, sum all
         rhs = stripped.split("=", 1)[1] if "=" in stripped else stripped
         # result shape(s) appear at start of rhs before the op name
         op_idx = rhs.find(m)

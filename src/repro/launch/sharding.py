@@ -11,7 +11,6 @@ from __future__ import annotations
 from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -66,7 +65,9 @@ def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
     def guarded(*entries):
         out = []
         for dim, ax in zip(shape, entries):
-            out.append(ax if _fits(dim, mesh, ax if isinstance(ax, tuple) else ax) else None)
+            out.append(
+                ax if _fits(dim, mesh, ax if isinstance(ax, tuple) else ax)
+                else None)
         return P(*out)
 
     if name == "embed":
@@ -101,7 +102,6 @@ def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
                  mp if _fits(shape[-1], mesh, mp) else None)
     if name in ("A_log", "D", "dt_bias", "conv_b") and nd >= 1:
         # per-channel SSM params: shard the channel dim (first after stack)
-        lead_n = nd - 1 if nd > 1 else 0
         entries = [None] * nd
         # channel dim is the first non-stack dim for A_log (L, d, N) -> d
         ch_idx = 1 if nd >= 2 else 0

@@ -7,13 +7,11 @@ the client "operates at" its precision level).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
 from repro.core import quant
 from repro.models.registry import Model
 from repro.optim import Optimizer, clip_by_global_norm

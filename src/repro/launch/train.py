@@ -22,7 +22,6 @@ import numpy as np
 from repro.ckpt import CheckpointManager
 from repro.configs.base import get_arch
 from repro.data.lm import token_batches
-from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import init_train_state, make_train_step
 from repro.models.registry import build_model
 from repro.optim import adamw, linear_warmup_cosine

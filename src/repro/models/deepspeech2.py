@@ -6,7 +6,7 @@ The synthetic "mel" features come from repro.data.voice.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ Design rules (see DESIGN.md §3/§4):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -18,7 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.util import constrain, get_abstract_mesh
+from repro.util import get_abstract_mesh
 
 Params = Dict[str, Any]
 
@@ -32,7 +31,8 @@ def dense_init(key, shape, dtype, scale: Optional[float] = None):
     """Truncated-normal fan-in init."""
     fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
     std = scale if scale is not None else fan_in ** -0.5
-    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (w * std).astype(dtype)
 
 
 def embed_init(key, shape, dtype):

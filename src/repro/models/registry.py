@@ -11,7 +11,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,6 @@ from repro.models import deepspeech2 as DS2
 from repro.models import hybrid as HY
 from repro.models import transformer as TF
 from repro.models import whisper as WH
-from repro.util import dtype_of
 
 # decode beyond this cache length switches to the sliding-window ring buffer
 FULL_CACHE_MAX = 32_768
@@ -87,7 +86,8 @@ class Model:
                 }
             if cfg.family == "ds2":
                 return {
-                    "frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), jnp.float32),
+                    "frames": jax.ShapeDtypeStruct(
+                        (B, S, cfg.frontend_dim), jnp.float32),
                     "labels": jax.ShapeDtypeStruct((B, S // 8), tok),
                     "frame_len": jax.ShapeDtypeStruct((B,), tok),
                     "label_len": jax.ShapeDtypeStruct((B,), tok),
@@ -127,7 +127,8 @@ def build_model(cfg: ArchConfig) -> Model:
             init=lambda key: TF.init_lm(key, cfg),
             loss=lambda p, b: TF.lm_loss(p, b, cfg),
             init_cache=lambda B, n: TF.init_decode_cache(cfg, B, n),
-            decode=lambda p, c, b, window=0: TF.decode_step(p, c, b, cfg, window=window),
+            decode=lambda p, c, b, window=0: TF.decode_step(
+                p, c, b, cfg, window=window),
             prefill=lambda p, b: TF.prefill(p, b, cfg),
         )
     if fam == "hybrid":
@@ -136,7 +137,8 @@ def build_model(cfg: ArchConfig) -> Model:
             init=lambda key: HY.init_hybrid(key, cfg),
             loss=lambda p, b: HY.hybrid_loss(p, b, cfg),
             init_cache=lambda B, n: HY.init_hybrid_cache(cfg, B, n),
-            decode=lambda p, c, b, window=0: HY.hybrid_decode_step(p, c, b, cfg, window=window),
+            decode=lambda p, c, b, window=0: HY.hybrid_decode_step(
+                p, c, b, cfg, window=window),
             prefill=lambda p, b: HY.hybrid_prefill(p, b, cfg),
         )
     if fam == "audio":
@@ -145,7 +147,8 @@ def build_model(cfg: ArchConfig) -> Model:
             init=lambda key: WH.init_whisper(key, cfg),
             loss=lambda p, b: WH.whisper_loss(p, b, cfg),
             init_cache=lambda B, n: WH.init_whisper_cache(cfg, B, n),
-            decode=lambda p, c, b, window=0: WH.whisper_decode_step(p, c, b, cfg, window=window),
+            decode=lambda p, c, b, window=0: WH.whisper_decode_step(
+                p, c, b, cfg, window=window),
             prefill=lambda p, b: WH.whisper_prefill(p, b, cfg),
         )
     if fam == "ds2":

@@ -142,7 +142,8 @@ def init_mamba1(key, cfg: ArchConfig, dtype) -> Params:
     )))
     return {
         "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
-        "conv_w": (jax.random.normal(ks[1], (K, di), jnp.float32) * (K ** -0.5)).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (K, di), jnp.float32)
+                   * (K ** -0.5)).astype(dtype),
         "conv_b": jnp.zeros((di,), dtype),
         "x_proj": dense_init(ks[2], (di, R + 2 * N), dtype),
         "dt_proj": dense_init(ks[3], (R, di), dtype, scale=R ** -0.5),
@@ -164,7 +165,8 @@ def _mamba1_inner(p: Params, xz: jnp.ndarray, cfg: ArchConfig, h0, conv_state=No
         K = p["conv_w"].shape[0]
         # conv tail = last K-1 pre-conv inputs (left-padded if T < K-1);
         # this is the conv state a subsequent decode step needs.
-        tail = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):] if K > 1 else x[:, :0]
+        tail = (jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):]
+                if K > 1 else x[:, :0])
         x = causal_conv1d(x, p["conv_w"], p["conv_b"])
         new_conv = tail
     else:
@@ -224,7 +226,8 @@ def init_mamba2(key, cfg: ArchConfig, dtype) -> Params:
     )))
     return {
         "in_proj": dense_init(ks[0], (d, 2 * di + 2 * N + H), dtype),
-        "conv_w": (jax.random.normal(ks[1], (K, conv_dim), jnp.float32) * (K ** -0.5)).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (K, conv_dim), jnp.float32)
+                   * (K ** -0.5)).astype(dtype),
         "conv_b": jnp.zeros((conv_dim,), dtype),
         "A_log": jnp.log(A),
         "D": jnp.ones((H,), jnp.float32),
@@ -295,7 +298,6 @@ def _ssd_scan(
 def _mamba2_split(p: Params, zxbcdt: jnp.ndarray, cfg: ArchConfig):
     di = cfg.resolved_d_inner()
     N = cfg.ssm_state
-    H = cfg.resolved_ssm_heads()
     z = zxbcdt[..., :di]
     xBC = zxbcdt[..., di : di + di + 2 * N]
     dt_raw = zxbcdt[..., di + di + 2 * N :]  # (B, T, H)
@@ -351,7 +353,8 @@ def mamba2_decode(
     A = -jnp.exp(p["A_log"])
     decay = jnp.exp(dt * A)  # (B, H)
     h = state["h"].astype(jnp.float32)
-    upd = jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32) * dt[..., None], Bm.astype(jnp.float32))
+    upd = jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32) * dt[..., None],
+                     Bm.astype(jnp.float32))
     h_new = decay[:, :, None, None] * h + upd
     y = jnp.einsum("bhpn,bn->bhp", h_new, Cm.astype(jnp.float32))
     y = y + x.astype(jnp.float32) * p["D"][None, :, None]

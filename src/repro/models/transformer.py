@@ -11,8 +11,7 @@ Three entry points per model:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +20,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
 from repro.models import ssm as S
-from repro.util import constrain, dtype_of, split_like
+from repro.util import constrain, dtype_of
 
 Params = Dict[str, Any]
 
@@ -214,7 +213,6 @@ def lm_loss(params: Params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig):
     tc = targets.reshape(B, n, chunk).swapaxes(0, 1)
     mc = mask.reshape(B, n, chunk).swapaxes(0, 1)
 
-    V = head.shape[-1]
 
     def ce_chunk(carry, inp):
         hh, tt, mm = inp

@@ -8,7 +8,7 @@ rest of the zoo (documented simplification vs whisper's GELU MLP).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

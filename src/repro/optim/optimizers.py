@@ -13,7 +13,7 @@ params are FSDP-sharded).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -119,7 +119,8 @@ def _adam_impl(lr, b1, b2, eps, weight_decay) -> Optimizer:
     sched = _as_schedule(lr)
 
     def init(params):
-        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        def zeros(p):
+            return jnp.zeros_like(p, jnp.float32)
         return {"m": jax.tree.map(zeros, params),
                 "v": jax.tree.map(zeros, params)}
 

@@ -20,14 +20,14 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models.registry import Model, build_model
+from repro.models.registry import build_model
 
 Pytree = Any
 

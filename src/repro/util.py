@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import contextlib
-from typing import Any, Iterable, Optional
 
 import jax
 import jax.numpy as jnp

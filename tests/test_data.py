@@ -1,6 +1,5 @@
 """Synthetic corpus: Table II mixture, shard composition, batching."""
 import numpy as np
-import pytest
 
 from repro.core.profiling.users import CATEGORIES, CATEGORY_PROBS, make_users
 from repro.data import voice
@@ -36,7 +35,6 @@ def test_frames_noise_scales_with_context():
     rng2 = np.random.RandomState(0)
     quiet = voice.synth_frames(ids, 0.1, rng1)
     noisy = voice.synth_frames(ids, 0.9, rng2)
-    base = np.repeat(voice.CHAR_BANK[ids], voice.FRAMES_PER_CHAR, axis=0)
     assert np.abs(noisy - quiet).mean() > 0.1  # noise level actually differs
 
 

@@ -5,7 +5,6 @@ import random
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import FLConfig
 from repro.core.profiling.users import drift_device, drift_user, make_users

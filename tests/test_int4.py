@@ -1,15 +1,14 @@
 """int4 packing + int4 qmatmul path."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # bare env: deterministic fallback sampler
     from _hypothesis_fallback import given, settings, st
 
 from repro.kernels import ops
-from repro.kernels.ops import pack_int4, qmatmul_int4, quantize_weights_int4, unpack_int4
+from repro.kernels.ops import (pack_int4, qmatmul_int4,
+                               quantize_weights_int4, unpack_int4)
 
 
 @settings(deadline=None, max_examples=20)

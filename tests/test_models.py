@@ -294,7 +294,6 @@ def _brute_force_ctc(log_probs, labels):
     import itertools
 
     T, V = log_probs.shape
-    L = len(labels)
 
     def collapse(path):
         out = []

@@ -1,10 +1,7 @@
 """MoE execution-path selection + routing invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import get_arch
 from repro.models.layers import _route_local, moe_uses_shard_map
 
 

@@ -2,9 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import ota, quant
+from repro.core import ota
 
 
 def _updates(n, shape=(500,), seed=0):

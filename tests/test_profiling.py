@@ -1,20 +1,17 @@
 """The paper's profiling pipeline: interview parsing, RAG retrieval,
 Eqs (1)-(4), contribution strategies, planner behaviour."""
 import numpy as np
-import pytest
 
-from repro.configs.base import BITS_TO_LEVEL
 from repro.core.profiling import (ContextQuantFeedbackDB, HardwareQuantPerfDB,
                                   InterviewAgent, RAGPlanner, SimLLM,
                                   UnifiedTierPlanner, evaluate_levels,
                                   make_fleet, make_users, plan_round,
                                   satisfaction_score, select_level,
                                   true_performance)
-from repro.core.profiling.evaluator import (contribution_multiplier,
-                                            estimate_category_mix, prior_perf)
+from repro.core.profiling.evaluator import contribution_multiplier
 from repro.core.profiling.interview import InferredProfile
 from repro.core.profiling.ragdb import embed_features
-from repro.core.profiling.users import FACTORS, eq3_score
+from repro.core.profiling.users import eq3_score
 
 
 # ---------------------------------------------------------------------------
@@ -106,7 +103,6 @@ def test_eq3_hand_computed():
 
 
 def test_argmax_selects_best_level():
-    users = make_users(1, seed=0)
     fleet = make_fleet(1, seed=0)
     prof = InferredProfile(user_id=0)
     levels = evaluate_levels(prof, fleet[0], ContextQuantFeedbackDB(),
