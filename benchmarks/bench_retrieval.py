@@ -1,0 +1,179 @@
+"""Retrieval-engine scaling: arena-backed batched top-k vs the legacy
+per-client scan (DESIGN.md §10).
+
+The planning path the RAG planner used to run was 2 stores x 4 precision
+levels x K clients = 8K serial numpy scans per round, each re-reading the
+whole (N, D) record matrix. The cohort-batched engine issues ONE batched
+query per store per round. This bench sweeps record count N x cohort
+size K and reports:
+
+- ``legacy_ms``:  8K serial scans (gemv + exact stable top-k per query —
+  the legacy ``VectorStore.query`` inner loop on raw arrays, i.e. a
+  *conservative* baseline: real legacy also paid python Record overhead
+  and re-embedding per level),
+- ``batched_ms``: 2 engine calls (one (K, D) GEMM + stable top-k each),
+- their speedup, and the int8-vs-f32 arena memory ratio.
+
+``--smoke`` is the CI mode (scripts/tier1.sh): asserts the batched
+engine's top-k == brute-force numpy exactly on an f32 store (scores and
+indices), the Pallas kernel == the jnp oracle bitwise on a ragged N, and
+the int8 storage class stays under 0.3x of f32 bytes; exits non-zero on
+violation. ``--full`` extends the sweep to N = 1M records. Runnable
+standalone (self-locates ``src/``) or via scripts/tier1.sh.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+try:
+    import repro  # noqa: F401  (importability probe)
+except ImportError:  # standalone invocation: put <repo>/src on sys.path
+    sys.path.insert(
+        0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.core.profiling.ragdb import RETRIEVE_K
+from repro.retrieval import (ArenaStore, RetrievalEngine, brute_force_topk,
+                             normalize_rows, stable_topk)
+
+D = 256          # EMBED_DIM of the RAG feature hashing
+N_LEVELS = 4     # precision levels the legacy evaluator queried per store
+N_STORES = 2     # context-feedback + hardware-perf databases
+
+QUICK_SWEEP = [
+    (1_000, 64), (10_000, 64), (100_000, 8), (100_000, 64),
+]
+FULL_EXTRA = [
+    (1_000_000, 64),
+]
+
+
+def _make_arenas(n: int, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    vecs = normalize_rows(rng.randn(n, D).astype(np.float32))
+    f32 = ArenaStore(D)
+    f32.add_batch(vecs)
+    int8 = ArenaStore(D, storage="int8")
+    int8.add_batch(vecs)
+    return vecs, f32, int8
+
+
+def _queries(k_cohort: int, seed: int = 1):
+    rng = np.random.RandomState(seed)
+    return normalize_rows(rng.randn(k_cohort, D).astype(np.float32))
+
+
+def _legacy_planning_pass(mat: np.ndarray, queries: np.ndarray, k: int):
+    """The pre-PR-4 planner retrieval pattern: one numpy scan per client
+    per store per precision level (the estimators re-queried per bits)."""
+    out = None
+    for q in queries:
+        for _ in range(N_STORES * N_LEVELS):
+            sims = mat @ q
+            out = stable_topk(sims[None], k)
+    return out
+
+
+def _batched_planning_pass(engine: RetrievalEngine, queries: np.ndarray,
+                           k: int):
+    """The cohort path: one engine query per store per round."""
+    out = None
+    for _ in range(N_STORES):
+        out = engine.topk(queries, k)
+    return out
+
+
+def bench_pair(n: int, k_cohort: int, reps: int = 3):
+    """Returns (legacy_s, batched_s, speedup, int8_mem_ratio)."""
+    vecs, f32, int8 = _make_arenas(n)
+    queries = _queries(k_cohort)
+    engine = RetrievalEngine(f32)
+    _batched_planning_pass(engine, queries, RETRIEVE_K)  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _batched_planning_pass(engine, queries, RETRIEVE_K)
+    batched_s = (time.perf_counter() - t0) / reps
+    _legacy_planning_pass(vecs[:256], queries[:1], RETRIEVE_K)  # warm
+    t0 = time.perf_counter()
+    _legacy_planning_pass(vecs, queries, RETRIEVE_K)
+    legacy_s = time.perf_counter() - t0
+    return (legacy_s, batched_s, legacy_s / batched_s,
+            int8.nbytes / f32.nbytes)
+
+
+def smoke() -> int:
+    """CI mode: exact-equivalence + storage-class asserts (~seconds)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import topk_cosine
+
+    n, k_cohort, k = 3000, 16, RETRIEVE_K  # n ragged vs the 256 tile
+    _, f32, int8 = _make_arenas(n)
+    queries = _queries(k_cohort)
+
+    # batched engine == brute-force numpy, exactly (scores AND indices)
+    s_eng, i_eng = RetrievalEngine(f32, use_kernel=False).topk(queries, k)
+    s_bf, i_bf = brute_force_topk(f32.vectors(), queries, k)
+    np.testing.assert_array_equal(i_eng, i_bf)
+    np.testing.assert_array_equal(s_eng, s_bf)
+
+    # Pallas kernel == jnp oracle, bitwise, on the ragged capacity slab
+    data, _ = f32.raw()
+    args = (jnp.asarray(queries), jnp.asarray(data), None, jnp.int32(n))
+    s_k, i_k = topk_cosine(*args, k=k, use_kernel=True)
+    s_o, i_o = topk_cosine(*args, k=k, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_o))
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_o))
+    np.testing.assert_array_equal(np.asarray(i_k), i_eng)
+
+    # int8 storage class: bounded memory, usable recall
+    ratio = int8.nbytes / f32.nbytes
+    assert ratio <= 0.3, f"int8 arena ratio {ratio} above 0.3"
+    _, i8 = RetrievalEngine(int8, use_kernel=False).topk(queries, 10)
+    _, i32 = RetrievalEngine(f32, use_kernel=False).topk(queries, 10)
+    overlap = np.mean([len(set(a) & set(b)) / 10 for a, b in zip(i8, i32)])
+    assert overlap >= 0.7, f"int8 recall@10 {overlap} below 0.7"
+
+    legacy_s, batched_s, speedup, _ = bench_pair(20_000, k_cohort, reps=2)
+    print(f"smoke OK: batched == brute force exactly (N={n}, K={k_cohort}, "
+          f"k={k}), kernel == oracle bitwise, int8 ratio {ratio:.3f}, "
+          f"recall@10 {overlap:.2f}; 20k-record planning pass "
+          f"{legacy_s * 1e3:.1f}ms legacy vs {batched_s * 1e3:.1f}ms "
+          f"batched ({speedup:.1f}x)")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="include the 1M-record config")
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: exact-equivalence asserts")
+    args = ap.parse_args()
+
+    if args.smoke:
+        raise SystemExit(smoke())
+
+    sweep = QUICK_SWEEP + (FULL_EXTRA if args.full else [])
+    if args.csv:
+        print("N,K,legacy_ms,batched_ms,speedup,int8_mem_ratio")
+    else:
+        print(f"{'N':>9} {'K':>4} {'legacy_ms':>10} {'batched_ms':>11} "
+              f"{'speedup':>8} {'int8_mem':>9}")
+    for n, k_cohort in sweep:
+        legacy_s, batched_s, speedup, ratio = bench_pair(n, k_cohort)
+        if args.csv:
+            print(f"{n},{k_cohort},{legacy_s*1e3:.1f},{batched_s*1e3:.1f},"
+                  f"{speedup:.1f},{ratio:.4f}")
+        else:
+            print(f"{n:>9} {k_cohort:>4} {legacy_s*1e3:>10.1f} "
+                  f"{batched_s*1e3:>11.1f} {speedup:>7.1f}x {ratio:>9.3f}")
+
+
+if __name__ == "__main__":
+    main()

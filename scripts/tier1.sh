@@ -1,14 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 verify (see ROADMAP.md): docs consistency, packed-uplink bench
-# smoke (hard-asserted acceptance checks), then the whole suite, stop on
-# first failure. Run from the repo root:  bash scripts/tier1.sh [extra
-# pytest args...]
-# CI (.github/workflows/ci.yml) runs these same three commands. The
+# smoke, retrieval-engine bench smoke (both hard-asserted acceptance
+# checks), then the whole suite, stop on first failure. Run from the
+# repo root:  bash scripts/tier1.sh [extra pytest args...]
+# CI (.github/workflows/ci.yml) runs these same four commands. The
 # PYTHONPATH export is belt-and-braces: pytest (conftest.py) and the
-# bench (in-file bootstrap) self-locate src/ when invoked standalone.
+# benches (in-file bootstrap) self-locate src/ when invoked standalone.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python scripts/check_docs.py
 python benchmarks/bench_aggregation.py --smoke
+python benchmarks/bench_retrieval.py --smoke
 python -m pytest -x -q "$@"

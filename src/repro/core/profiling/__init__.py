@@ -1,15 +1,31 @@
-from repro.core.profiling.hardware import (DeviceSpec,  # noqa: F401
-                                           hardware_tier, make_fleet,
-                                           max_feasible_bits)
-from repro.core.profiling.users import (UserTruth,  # noqa: F401
-                                        make_users, satisfaction_score,
-                                        true_performance)
-from repro.core.profiling.interview import (InferredProfile,  # noqa: F401
-                                            InterviewAgent, SimLLM)
-from repro.core.profiling.ragdb import (ContextQuantFeedbackDB,  # noqa: F401
-                                        HardwareQuantPerfDB, VectorStore)
-from repro.core.profiling.evaluator import (contribution_multiplier,  # noqa: F401
-                                            evaluate_levels, select_level)
-from repro.core.profiling.planner import (PlanDecision,  # noqa: F401
-                                          RAGPlanner, UnifiedTierPlanner,
-                                          plan_round)
+from repro.core.profiling.evaluator import (
+    contribution_multiplier,
+    evaluate_levels,
+    select_level,
+)
+from repro.core.profiling.hardware import (
+    DeviceSpec,
+    hardware_tier,
+    make_fleet,
+    max_feasible_bits,
+)
+from repro.core.profiling.interview import InferredProfile, InterviewAgent, SimLLM
+from repro.core.profiling.planner import (
+    PlanDecision,
+    RAGPlanner,
+    UnifiedTierPlanner,
+    plan_round,
+)
+from repro.core.profiling.ragdb import (
+    ContextQuantFeedbackDB,
+    HardwareQuantPerfDB,
+    VectorStore,
+    embed_batch,
+    embed_features,
+)
+from repro.core.profiling.users import (
+    UserTruth,
+    make_users,
+    satisfaction_score,
+    true_performance,
+)

@@ -11,27 +11,45 @@ R_f / P_f come from RAG retrievals when the databases have relevant
 history, falling back to the analytic precision priors
 (``PrecisionLevel``) when they don't — "data-driven estimation" that
 sharpens as feedback accumulates.
+
+Retrieval is bits-agnostic, so each client needs exactly one hit list
+per store per planning pass: ``evaluate_levels`` fetches them itself in
+the per-client path, or scores the pre-fetched ``ctx_hits``/``hw_hits``
+the cohort-batched planner hands in (one engine query for the whole
+cohort, DESIGN.md §10).
 """
+
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import BITS_TO_LEVEL
 from repro.core.profiling.hardware import DeviceSpec
 from repro.core.profiling.interview import InferredProfile
-from repro.core.profiling.ragdb import ContextQuantFeedbackDB, HardwareQuantPerfDB
-from repro.core.profiling.users import (CATEGORIES, CATEGORY_PROBS, FACTORS,
-                                        eq3_score)
+from repro.core.profiling.ragdb import (
+    RETRIEVE_K,
+    ContextQuantFeedbackDB,
+    HardwareQuantPerfDB,
+    Record,
+    perf_from_hits,
+    satisfaction_from_hits,
+)
+from repro.core.profiling.users import CATEGORIES, CATEGORY_PROBS, FACTORS, eq3_score
 
 MINORITY = {"smart_home", "personal_request"}  # from Table II
 MAJORITY = {"entertainment", "general_query"}
 
+Hits = List[Tuple[float, Record]]
+
 
 def prior_perf(bits: int) -> Dict[str, float]:
     lvl = BITS_TO_LEVEL[bits]
-    return {"accuracy": lvl.rel_accuracy, "energy": lvl.rel_energy,
-            "latency": lvl.rel_latency}
+    return {
+        "accuracy": lvl.rel_accuracy,
+        "energy": lvl.rel_energy,
+        "latency": lvl.rel_latency,
+    }
 
 
 def estimate_category_mix(profile: InferredProfile) -> Dict[str, float]:
@@ -103,33 +121,37 @@ def evaluate_levels(
     *,
     strategy: str = "fedavg",
     energy_priority: float = 1.0,
+    ctx_hits: Optional[Hits] = None,
+    hw_hits: Optional[Hits] = None,
 ) -> List[ScoredLevel]:
     """Score every hardware-feasible precision level via Eqs (1)–(3).
 
     ``energy_priority`` > 1 implements the paper's energy-savings mode
     (server scales the energy penalty for the whole federation).
+    ``ctx_hits``/``hw_hits`` are optional pre-fetched retrievals (the
+    cohort-batched path); absent, each store is queried once here — the
+    hit lists are shared across precision levels either way.
     """
     w = profile.weights_estimate()
-    ctx_features = profile.features()
-    hw_features = spec.features()
+    if hw_hits is None:
+        hw_hits = hqp_db.query(spec.features(), k=RETRIEVE_K)
+    if ctx_hits is None:
+        ctx_hits = cqf_db.query(profile.features(), k=RETRIEVE_K)
     out: List[ScoredLevel] = []
     for bits in spec.supported_bits:
-        perf = hqp_db.estimate_perf(hw_features, bits)
+        perf = perf_from_hits(hw_hits, bits)
         source = "rag"
         if perf is None:
             perf = prior_perf(bits)
             source = "prior"
         c_q = contribution_multiplier(bits, profile, strategy)
         # Eqs (1)-(3) via the shared reward-penalty scorer
-        score = eq3_score(w, perf, contribution=c_q,
-                          energy_priority=energy_priority)
-        reward = c_q * sum(
-            w[f] * r for f, r in zip(
-                FACTORS, (perf["accuracy"], 1 - perf["energy"],
-                          1 - perf["latency"])))
+        score = eq3_score(w, perf, contribution=c_q, energy_priority=energy_priority)
+        rewards = (perf["accuracy"], 1 - perf["energy"], 1 - perf["latency"])
+        reward = c_q * sum(w[f] * r for f, r in zip(FACTORS, rewards))
         penalty = reward - score
         # blend with retrieved direct satisfaction history when available
-        est = cqf_db.estimate_satisfaction(ctx_features, bits)
+        est = satisfaction_from_hits(ctx_hits, bits)
         if est is not None:
             sat_est, conf = est
             # blend weight tuned on the ablation benchmark: 0.5*conf pulled
@@ -138,9 +160,16 @@ def evaluate_levels(
             # as a correction rather than a replacement.
             score = (1 - 0.25 * conf) * score + 0.25 * conf * sat_est
             source = "blend"
-        out.append(ScoredLevel(bits=bits, score=float(score),
-                               reward=float(reward), penalty=float(penalty),
-                               contribution=float(c_q), source=source))
+        out.append(
+            ScoredLevel(
+                bits=bits,
+                score=float(score),
+                reward=float(reward),
+                penalty=float(penalty),
+                contribution=float(c_q),
+                source=source,
+            )
+        )
     return out
 
 

@@ -7,6 +7,7 @@ fields a real agent could read (and respects a per-device privacy flag
 that hides some of them, which the RAG retrieval then has to work around
 — same failure mode as production).
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -15,16 +16,41 @@ from typing import Dict, List, Tuple
 
 DEVICE_CLASSES: Dict[str, Dict] = {
     # cpu_gflops ~ sustained fp32; energy_per_mac_pj at 32-bit
-    "flagship_phone": dict(cpu_gflops=250.0, ram_gb=12, battery_mah=5000,
-                           supported_bits=(4, 8, 16, 32), energy_per_mac_pj=3.0),
-    "midrange_phone": dict(cpu_gflops=80.0, ram_gb=6, battery_mah=4500,
-                           supported_bits=(4, 8, 16), energy_per_mac_pj=4.5),
-    "smart_speaker": dict(cpu_gflops=25.0, ram_gb=2, battery_mah=0,  # mains
-                          supported_bits=(4, 8, 16), energy_per_mac_pj=6.0),
-    "iot_hub": dict(cpu_gflops=8.0, ram_gb=1, battery_mah=2000,
-                    supported_bits=(4, 8), energy_per_mac_pj=8.0),
-    "laptop": dict(cpu_gflops=600.0, ram_gb=16, battery_mah=8000,
-                   supported_bits=(4, 8, 16, 32), energy_per_mac_pj=2.0),
+    "flagship_phone": dict(
+        cpu_gflops=250.0,
+        ram_gb=12,
+        battery_mah=5000,
+        supported_bits=(4, 8, 16, 32),
+        energy_per_mac_pj=3.0,
+    ),
+    "midrange_phone": dict(
+        cpu_gflops=80.0,
+        ram_gb=6,
+        battery_mah=4500,
+        supported_bits=(4, 8, 16),
+        energy_per_mac_pj=4.5,
+    ),
+    "smart_speaker": dict(
+        cpu_gflops=25.0,
+        ram_gb=2,
+        battery_mah=0,  # mains
+        supported_bits=(4, 8, 16),
+        energy_per_mac_pj=6.0,
+    ),
+    "iot_hub": dict(
+        cpu_gflops=8.0,
+        ram_gb=1,
+        battery_mah=2000,
+        supported_bits=(4, 8),
+        energy_per_mac_pj=8.0,
+    ),
+    "laptop": dict(
+        cpu_gflops=600.0,
+        ram_gb=16,
+        battery_mah=8000,
+        supported_bits=(4, 8, 16, 32),
+        energy_per_mac_pj=2.0,
+    ),
 }
 
 CLASS_MIX = [
@@ -72,20 +98,25 @@ def make_fleet(n: int, seed: int = 0) -> List[DeviceSpec]:
     for i in range(n):
         cls = rng.choices(classes, probs)[0]
         base = DEVICE_CLASSES[cls]
+
         def jitter(v):
             return v * rng.uniform(0.85, 1.15)
-        fleet.append(DeviceSpec(
-            device_id=i,
-            device_class=cls,
-            cpu_gflops=jitter(base["cpu_gflops"]),
-            ram_gb=base["ram_gb"],
-            battery_mah=base["battery_mah"],
-            supported_bits=base["supported_bits"],
-            energy_per_mac_pj=jitter(base["energy_per_mac_pj"]),
-            power_state=rng.choices(
-                ["normal", "low_battery", "charging"], [0.7, 0.15, 0.15])[0],
-            privacy_hide_specs=rng.random() < 0.1,
-        ))
+
+        fleet.append(
+            DeviceSpec(
+                device_id=i,
+                device_class=cls,
+                cpu_gflops=jitter(base["cpu_gflops"]),
+                ram_gb=base["ram_gb"],
+                battery_mah=base["battery_mah"],
+                supported_bits=base["supported_bits"],
+                energy_per_mac_pj=jitter(base["energy_per_mac_pj"]),
+                power_state=rng.choices(
+                    ["normal", "low_battery", "charging"], [0.7, 0.15, 0.15]
+                )[0],
+                privacy_hide_specs=rng.random() < 0.1,
+            )
+        )
     return fleet
 
 

@@ -16,6 +16,7 @@ users may not mention factors (chattiness), wordings are ambiguous, and
 the resulting inferred profile carries per-field confidence — the RAG
 retrieval (§III-B2) exists to fill exactly these gaps.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -30,16 +31,17 @@ from repro.core.profiling.users import FACTORS, UserTruth
 
 LOCATION_PHRASES = {
     "bedroom": ["it's in my bedroom", "sits on my nightstand", "bedroom device"],
-    "living_room": ["it's in the living room", "next to the TV",
-                    "the kids use it in the lounge"],
-    "kitchen": ["kitchen counter", "I use it while cooking",
-                "it's in the kitchen"],
+    "living_room": [
+        "it's in the living room",
+        "next to the TV",
+        "the kids use it in the lounge",
+    ],
+    "kitchen": ["kitchen counter", "I use it while cooking", "it's in the kitchen"],
     "office": ["on my office desk", "I use it at work", "study room"],
     "outdoor": ["I mostly use it outside", "on the patio", "in the garden"],
 }
 TIME_PHRASES = {
-    "daytime": ["mostly during the day", "throughout the workday",
-                "daytime mostly"],
+    "daytime": ["mostly during the day", "throughout the workday", "daytime mostly"],
     "nighttime": ["usually at night", "before bed", "late evenings"],
 }
 FREQ_PHRASES = {
@@ -48,18 +50,32 @@ FREQ_PHRASES = {
     "high": ["all the time", "constantly", "dozens of times a day"],
 }
 SENSITIVITY_PHRASES = {
-    "accuracy": ["it keeps mishearing me", "I need it to get things right",
-                 "transcription mistakes drive me crazy",
-                 "accuracy matters most to me"],
-    "energy": ["the battery dies fast", "I worry about power usage",
-               "it should be efficient", "battery life is my main concern"],
-    "latency": ["it feels sluggish", "I hate waiting for responses",
-                "it must respond instantly", "speed is everything"],
+    "accuracy": [
+        "it keeps mishearing me",
+        "I need it to get things right",
+        "transcription mistakes drive me crazy",
+        "accuracy matters most to me",
+    ],
+    "energy": [
+        "the battery dies fast",
+        "I worry about power usage",
+        "it should be efficient",
+        "battery life is my main concern",
+    ],
+    "latency": [
+        "it feels sluggish",
+        "I hate waiting for responses",
+        "it must respond instantly",
+        "speed is everything",
+    ],
 }
 CATEGORY_PHRASES = {
     "entertainment": ["I mostly play music", "podcasts and radio"],
-    "smart_home": ["controlling the lights", "smart home stuff",
-                   "thermostat and plugs"],
+    "smart_home": [
+        "controlling the lights",
+        "smart home stuff",
+        "thermostat and plugs",
+    ],
     "general_query": ["asking questions", "weather and news"],
     "personal_request": ["reminders and my calendar", "personal lists"],
 }
@@ -129,6 +145,7 @@ LEXICON: List[Tuple[str, str, str, float]] = [
 @dataclasses.dataclass
 class InferredProfile:
     """What the backend believes about a user after an interview."""
+
     user_id: int
     location: Optional[str] = None
     location_conf: float = 0.0
@@ -138,7 +155,8 @@ class InferredProfile:
     frequency_conf: float = 0.0
     # relative sensitivity signal strengths (unnormalised)
     sens: Dict[str, float] = dataclasses.field(
-        default_factory=lambda: {f: 0.0 for f in FACTORS})
+        default_factory=lambda: {f: 0.0 for f in FACTORS}
+    )
     category_signal: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def weights_estimate(self) -> Dict[str, float]:
@@ -182,7 +200,8 @@ class SimLLM:
                 elif field.startswith("cat_"):
                     cat = field[4:]
                     prof.category_signal[cat] = max(
-                        prof.category_signal.get(cat, 0.0), strength)
+                        prof.category_signal.get(cat, 0.0), strength
+                    )
                 else:
                     cur = best.get(field)
                     if cur is None or strength > cur[1]:
@@ -211,8 +230,10 @@ class InterviewAgent:
     def _utterance(self, user: UserTruth) -> str:
         rng = self.rng
         parts: List[str] = []
+
         def reveal():
             return rng.random() < user.chattiness
+
         if reveal():
             parts.append(rng.choice(LOCATION_PHRASES[user.location]))
         if reveal():
@@ -241,8 +262,7 @@ class InterviewAgent:
         """Post-round feedback text, tone keyed to realised satisfaction."""
         rng = self.rng
         if satisfaction > 0.35:
-            base = rng.choice(["works great", "very happy with it",
-                               "no complaints"])
+            base = rng.choice(["works great", "very happy with it", "no complaints"])
         elif satisfaction > 0.1:
             base = rng.choice(["it's okay", "decent overall", "fine mostly"])
         else:

@@ -1,8 +1,8 @@
 """RAG knowledge databases (the paper's §III-B2).
 
 Two stores, both built on a feature-hashed vector index with cosine
-retrieval (pure numpy; an embedding-model-backed store is a drop-in —
-the interface is add/query):
+retrieval (an embedding-model-backed store is a drop-in — the interface
+is add/query):
 
 - ``ContextQuantFeedbackDB``: archives (context features, assigned bits,
   realised feedback/satisfaction) per round — "semantic mappings between
@@ -12,16 +12,34 @@ the interface is add/query):
   trade-off store queried by hardware similarity.
 
 Records append continuously ("facilitating continuous refinement").
+
+Since PR 4 both databases ride the retrieval subsystem
+(``repro.retrieval``, DESIGN.md §10): vectors live in a contiguous
+arena slab and queries go through the batched engine — one call per
+cohort (``query_batch``) instead of one numpy scan per client. The
+neighbour-weighting estimators are exposed as ``*_from_hits`` functions
+so the cohort-batched planner can score pre-fetched hit lists. The
+legacy brute-force ``VectorStore`` stays as the arena's equivalence
+oracle (same tie contract: descending similarity, ties by ascending
+record index).
 """
+
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Any, Dict, List, Optional, Tuple
+import math
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.retrieval.store import ArenaVectorStore
+
 EMBED_DIM = 256
+
+# neighbours fetched per store per query — the estimators' k = 8 times
+# the 4x over-fetch the bit-distance weighting wants
+RETRIEVE_K = 32
 
 
 def _hash_idx(token: str) -> Tuple[int, float]:
@@ -41,6 +59,11 @@ def embed_features(features: Dict[str, float]) -> np.ndarray:
     return v / n if n > 0 else v
 
 
+def embed_batch(features_list: Iterable[Dict[str, float]]) -> np.ndarray:
+    """Embed a whole cohort's feature dicts into one (K, D) query batch."""
+    return np.stack([embed_features(f) for f in features_list])
+
+
 @dataclasses.dataclass
 class Record:
     features: Dict[str, float]
@@ -48,87 +71,160 @@ class Record:
 
 
 class VectorStore:
+    """Legacy brute-force store — the arena engine's equivalence oracle.
+
+    Kept deliberately simple (one numpy scan per query) but with the two
+    seed defects fixed: adds write into an amortized-doubling matrix
+    instead of re-stacking O(N) vectors on every add -> query cycle, and
+    a zero-norm query (empty/cancelled features) returns no hits instead
+    of cosine-against-zeros.
+    """
+
     def __init__(self):
-        self._vecs: List[np.ndarray] = []
+        self._matrix = np.zeros((64, EMBED_DIM), np.float32)
+        self._n = 0
         self._records: List[Record] = []
-        self._matrix: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
-        return len(self._records)
+        return self._n
 
     def add(self, features: Dict[str, float], payload: Dict[str, Any]) -> None:
-        self._vecs.append(embed_features(features))
+        if self._n == self._matrix.shape[0]:
+            grown = np.zeros((2 * self._n, EMBED_DIM), np.float32)
+            grown[: self._n] = self._matrix
+            self._matrix = grown
+        self._matrix[self._n] = embed_features(features)
         self._records.append(Record(features, payload))
-        self._matrix = None  # invalidate
+        self._n += 1
 
-    def query(self, features: Dict[str, float],
-              k: int = 8) -> List[Tuple[float, Record]]:
+    def query(
+        self, features: Dict[str, float], k: int = 8
+    ) -> List[Tuple[float, Record]]:
         if not self._records:
             return []
-        if self._matrix is None:
-            self._matrix = np.stack(self._vecs)
         q = embed_features(features)
-        sims = self._matrix @ q
-        k = min(k, len(sims))
-        top = np.argpartition(-sims, k - 1)[:k]
-        top = top[np.argsort(-sims[top])]
-        return [(float(sims[i]), self._records[i]) for i in top]
+        if not np.any(q):  # zero-norm query guard
+            return []
+        sims = self._matrix[: self._n] @ q
+        # independent of the engine's stable_topk on purpose — this is
+        # the oracle, so it uses the plain brute-force specification of
+        # the tie contract (stable sort: desc score, ties by asc index)
+        idx = np.argsort(-sims, kind="stable")[: min(k, self._n)]
+        return [(float(sims[i]), self._records[i]) for i in idx]
 
 
-class ContextQuantFeedbackDB(VectorStore):
+# ---------------------------------------------------------------------------
+# neighbour-weighted estimators over hit lists
+# ---------------------------------------------------------------------------
+
+
+def satisfaction_from_hits(
+    hits: List[Tuple[float, Record]], bits: int
+) -> Optional[Tuple[float, float]]:
+    """(estimate, confidence) for assigning ``bits`` given retrieved
+    context hits.
+
+    Retrieval is context-wide; matching-bit neighbours weigh fully,
+    near-bit neighbours partially (quantization effects are smooth in
+    log-bits).
+    """
+    if not hits:
+        return None
+    num = den = 0.0
+    log_bits = math.log2(bits)
+    for sim, rec in hits:
+        if sim <= 0:
+            continue
+        # math.log2 over np.log2: these are python scalars in the
+        # planner's per-level hot loop, where numpy scalar dispatch
+        # dominated the profile
+        db = abs(math.log2(rec.payload["bits"]) - log_bits)
+        bit_w = max(0.0, 1.0 - 0.5 * db)
+        w = sim * bit_w
+        num += w * rec.payload["satisfaction"]
+        den += w
+    if den < 1e-6:
+        return None
+    conf = min(1.0, den / 3.0)
+    return num / den, conf
+
+
+def perf_from_hits(
+    hits: List[Tuple[float, Record]], bits: int
+) -> Optional[Dict[str, float]]:
+    """Similarity-weighted perf estimate from matching-bit hits."""
+    agg: Dict[str, float] = {}
+    den = 0.0
+    for sim, rec in hits:
+        if sim <= 0 or rec.payload["bits"] != bits:
+            continue
+        for name, val in rec.payload["perf"].items():
+            agg[name] = agg.get(name, 0.0) + sim * val
+        den += sim
+    if den < 1e-6:
+        return None
+    return {name: v / den for name, v in agg.items()}
+
+
+# ---------------------------------------------------------------------------
+# the arena-backed stores
+# ---------------------------------------------------------------------------
+
+
+class _FeatureArenaStore(ArenaVectorStore):
+    """Feature-dict front end over the arena store (append-only; save /
+    restore serialize the Record list through the ckpt layer)."""
+
+    def __init__(self, *, storage: str = "f32"):
+        super().__init__(
+            EMBED_DIM,
+            storage=storage,
+            to_doc=dataclasses.asdict,
+            from_doc=lambda d: Record(**d),
+        )
+
+    def add(self, features: Dict[str, float], payload: Dict[str, Any]) -> None:
+        self.add_vec(embed_features(features), Record(features, payload))
+
+    def query(
+        self, features: Dict[str, float], k: int = 8
+    ) -> List[Tuple[float, Record]]:
+        q = embed_features(features)
+        if not len(self) or not np.any(q):  # zero-norm query guard
+            return []
+        return self.query_vec(q, k)
+
+
+class ContextQuantFeedbackDB(_FeatureArenaStore):
     """context/preference features + bits -> realised satisfaction feedback."""
 
-    def add_feedback(self, features: Dict[str, float], bits: int,
-                     satisfaction: float, perf: Dict[str, float]) -> None:
-        self.add(features, {"bits": bits, "satisfaction": satisfaction,
-                            "perf": dict(perf)})
+    def add_feedback(
+        self,
+        features: Dict[str, float],
+        bits: int,
+        satisfaction: float,
+        perf: Dict[str, float],
+    ) -> None:
+        self.add(
+            features,
+            {"bits": bits, "satisfaction": satisfaction, "perf": dict(perf)},
+        )
 
     def estimate_satisfaction(
         self, features: Dict[str, float], bits: int, k: int = 8
     ) -> Optional[Tuple[float, float]]:
-        """(estimate, confidence) for assigning ``bits`` under ``features``.
-
-        Retrieval is context-wide; matching-bit neighbours weigh fully,
-        near-bit neighbours partially (quantization effects are smooth
-        in log-bits).
-        """
-        hits = self.query(features, k=k * 4)
-        if not hits:
-            return None
-        num = den = 0.0
-        for sim, rec in hits:
-            if sim <= 0:
-                continue
-            db = abs(np.log2(rec.payload["bits"]) - np.log2(bits))
-            bit_w = max(0.0, 1.0 - 0.5 * db)
-            w = sim * bit_w
-            num += w * rec.payload["satisfaction"]
-            den += w
-        if den < 1e-6:
-            return None
-        conf = min(1.0, den / 3.0)
-        return num / den, conf
+        return satisfaction_from_hits(self.query(features, k=k * 4), bits)
 
 
-class HardwareQuantPerfDB(VectorStore):
+class HardwareQuantPerfDB(_FeatureArenaStore):
     """hardware features + bits -> measured perf dict."""
 
-    def add_measurement(self, hw_features: Dict[str, float], bits: int,
-                        perf: Dict[str, float]) -> None:
+    def add_measurement(
+        self, hw_features: Dict[str, float], bits: int, perf: Dict[str, float]
+    ) -> None:
         self.add(hw_features, {"bits": bits, "perf": dict(perf)})
 
     def estimate_perf(
         self, hw_features: Dict[str, float], bits: int, k: int = 8
     ) -> Optional[Dict[str, float]]:
-        hits = self.query(hw_features, k=k * 4)
-        agg: Dict[str, float] = {}
-        den = 0.0
-        for sim, rec in hits:
-            if sim <= 0 or rec.payload["bits"] != bits:
-                continue
-            for name, val in rec.payload["perf"].items():
-                agg[name] = agg.get(name, 0.0) + sim * val
-            den += sim
-        if den < 1e-6:
-            return None
-        return {name: v / den for name, v in agg.items()}
+        return perf_from_hits(self.query(hw_features, k=k * 4), bits)

@@ -10,6 +10,7 @@ interview transcripts and RAG retrievals; the oracle scores what they chose.
 Satisfaction oracle = the paper's Eq. (3) evaluated with the TRUE weights
 and the TRUE context-modulated performance at the assigned precision.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -21,8 +22,13 @@ from repro.core.profiling.hardware import DeviceSpec
 
 LOCATIONS = ["bedroom", "living_room", "kitchen", "office", "outdoor"]
 # Table I: location -> input noise level (0 = quiet, 1 = very noisy)
-LOCATION_NOISE = {"bedroom": 0.1, "living_room": 0.7, "kitchen": 0.6,
-                  "office": 0.3, "outdoor": 0.9}
+LOCATION_NOISE = {
+    "bedroom": 0.1,
+    "living_room": 0.7,
+    "kitchen": 0.6,
+    "office": 0.3,
+    "outdoor": 0.9,
+}
 TIMES = ["daytime", "nighttime"]
 TIME_NOISE = {"daytime": 0.6, "nighttime": 0.2}
 TIME_QUANTITY = {"daytime": 0.8, "nighttime": 0.3}
@@ -47,13 +53,13 @@ class UserTruth:
 
     @property
     def noise_level(self) -> float:
-        return min(1.0, 0.6 * LOCATION_NOISE[self.location]
-                   + 0.4 * TIME_NOISE[self.interaction_time])
+        noise = 0.6 * LOCATION_NOISE[self.location]
+        return min(1.0, noise + 0.4 * TIME_NOISE[self.interaction_time])
 
     @property
     def data_quantity(self) -> float:
-        return 0.5 * FREQ_QUANTITY[self.frequency] \
-            + 0.5 * TIME_QUANTITY[self.interaction_time]
+        quantity = 0.5 * FREQ_QUANTITY[self.frequency]
+        return quantity + 0.5 * TIME_QUANTITY[self.interaction_time]
 
     def context_features(self) -> Dict[str, float]:
         f = {
@@ -87,15 +93,17 @@ def make_users(n: int, seed: int = 0) -> List[UserTruth]:
         draws = [rng.gammavariate(a, 1.0) for a in alpha]
         tot = sum(draws)
         mix = {c: d / tot for c, d in zip(CATEGORIES, draws)}
-        users.append(UserTruth(
-            user_id=i,
-            weights=_gaussian_weights(rng),
-            location=rng.choices(LOCATIONS, [0.25, 0.3, 0.15, 0.2, 0.1])[0],
-            interaction_time=rng.choices(TIMES, [0.65, 0.35])[0],
-            frequency=rng.choices(FREQUENCIES, [0.3, 0.4, 0.3])[0],
-            category_mix=mix,
-            chattiness=rng.uniform(0.4, 1.0),
-        ))
+        users.append(
+            UserTruth(
+                user_id=i,
+                weights=_gaussian_weights(rng),
+                location=rng.choices(LOCATIONS, [0.25, 0.3, 0.15, 0.2, 0.1])[0],
+                interaction_time=rng.choices(TIMES, [0.65, 0.35])[0],
+                frequency=rng.choices(FREQUENCIES, [0.3, 0.4, 0.3])[0],
+                category_mix=mix,
+                chattiness=rng.uniform(0.4, 1.0),
+            )
+        )
     return users
 
 
@@ -119,9 +127,7 @@ _CLASS_LAT_DEV = {
 }
 
 
-def true_performance(
-    user: UserTruth, spec: DeviceSpec, bits: int
-) -> Dict[str, float]:
+def true_performance(user: UserTruth, spec: DeviceSpec, bits: int) -> Dict[str, float]:
     """Realised (accuracy_utility, energy_cost, latency_cost), all in [0,1].
 
     Accuracy degrades faster at low precision in noisy contexts (quantized
@@ -175,9 +181,7 @@ def eq3_score(
     return r_total - p_total
 
 
-def satisfaction_score(
-    user: UserTruth, spec: DeviceSpec, bits: int
-) -> float:
+def satisfaction_score(user: UserTruth, spec: DeviceSpec, bits: int) -> float:
     """Oracle satisfaction: Eq. (3) with ground-truth weights and realised
     context-modulated performance (C_q = 1, no server priority)."""
     return eq3_score(user.weights, true_performance(user, spec, bits))
@@ -185,8 +189,7 @@ def satisfaction_score(
 
 def best_possible_bits(user: UserTruth, spec: DeviceSpec) -> int:
     """Oracle-optimal precision (upper bound for planner evaluation)."""
-    return max(spec.supported_bits,
-               key=lambda b: satisfaction_score(user, spec, b))
+    return max(spec.supported_bits, key=lambda b: satisfaction_score(user, spec, b))
 
 
 # ---------------------------------------------------------------------------
@@ -195,8 +198,12 @@ def best_possible_bits(user: UserTruth, spec: DeviceSpec) -> int:
 # ---------------------------------------------------------------------------
 
 
-def drift_user(user: UserTruth, rng: random.Random,
-               p_move: float = 0.08, p_schedule: float = 0.10) -> bool:
+def drift_user(
+    user: UserTruth,
+    rng: random.Random,
+    p_move: float = 0.08,
+    p_schedule: float = 0.10,
+) -> bool:
     """Mutate a user's operational context in place.
 
     Users occasionally relocate the device (bedroom -> kitchen changes the
@@ -206,17 +213,15 @@ def drift_user(user: UserTruth, rng: random.Random,
     """
     changed = False
     if rng.random() < p_move:
-        new_loc = rng.choice([l for l in LOCATIONS if l != user.location])
-        user.location = new_loc
+        user.location = rng.choice([l for l in LOCATIONS if l != user.location])
         changed = True
     if rng.random() < p_schedule:
-        user.interaction_time = ("nighttime"
-                                 if user.interaction_time == "daytime"
-                                 else "daytime")
+        user.interaction_time = (
+            "nighttime" if user.interaction_time == "daytime" else "daytime"
+        )
         changed = True
     if rng.random() < 0.05:
-        user.frequency = rng.choice(
-            [f for f in FREQUENCIES if f != user.frequency])
+        user.frequency = rng.choice([f for f in FREQUENCIES if f != user.frequency])
         changed = True
     return changed
 

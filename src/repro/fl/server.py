@@ -93,8 +93,10 @@ class FLServer:
         n_hw_changes = sum(drift_device(s, drift_rng) for s in specs)
         self.last_drift = (n_context_changes, n_hw_changes)
 
-        # ---- multi-client quantization planning (profiling pipeline)
-        decisions = plan_round(self.planner.plan(users, specs))
+        # ---- multi-client quantization planning (profiling pipeline):
+        # cohort-batched — one RAG engine query per store for the whole
+        # round instead of a per-client scan (DESIGN.md §10)
+        decisions = plan_round(self.planner.plan_cohort(users, specs))
         bits = {d.user_id: d.bits for d in decisions}
 
         # ---- local training at the planned precision (stragglers drop out).

@@ -119,6 +119,41 @@ def ota_dequant_superpose(q: jnp.ndarray, scale: jnp.ndarray,
     return out[:M]
 
 
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
+def topk_cosine(qm: jnp.ndarray, recs: jnp.ndarray,
+                scales: Optional[jnp.ndarray], n: jnp.ndarray, *,
+                k: int, use_kernel: bool = True):
+    """Batched cosine top-k over an arena record slab.
+
+    qm: (Q, D) f32 unit-norm query batch; recs: (Np, D) f32 or int8
+    capacity slab with Np % topk_similarity.TILE_N == 0; scales:
+    (Np, D // qblock) f32 scale grid (int8 recs) or None; n: () traced
+    live record count — the jit cache keys on (Q-pad, Np, D, k, storage
+    class), never on n, so arena appends don't recompile. k is static,
+    <= topk_similarity.TOPK_LANES.
+
+    Returns (scores (Q, k) f32, idx (Q, k) int32) under the engine's tie
+    contract (descending score, ties by ascending index). With
+    ``use_kernel`` the Pallas kernel runs (interpret mode off-TPU);
+    otherwise the bit-equal jnp oracle ``ref.topk_similarity_ref`` — the
+    CPU perf path, as with the OTA kernels.
+    """
+    from repro.kernels import ref as _ref
+    from repro.kernels import topk_similarity as _tk
+
+    Q, D = qm.shape
+    assert 0 < k <= _tk.TOPK_LANES, k
+    Qp = -(-Q // 8) * 8  # f32 sublane multiple
+    qp = jnp.pad(qm, ((0, Qp - Q), (0, 0))) if Qp != Q else qm
+    if use_kernel:
+        interpret = jax.devices()[0].platform != "tpu"
+        s, i = _tk.topk_similarity_2d(qp, recs, scales, n,
+                                      interpret=interpret)
+    else:
+        s, i = _ref.topk_similarity_ref(qp, recs, scales, n)
+    return s[:Q, :k], i[:Q, :k]
+
+
 @jax.jit
 def qmatmul(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     """x (M, K) @ dequant(w_q (K, N) int8; per-channel scale (N,))."""

@@ -101,6 +101,45 @@ def ota_aggregate_ref(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
                       x.astype(jnp.float32)) + noise_std * noise
 
 
+def topk_similarity_ref(qm: jnp.ndarray, recs: jnp.ndarray,
+                        scales: Optional[jnp.ndarray], n: jnp.ndarray):
+    """Oracle for the fused similarity/top-k kernel
+    (``topk_similarity.topk_similarity_2d``) — the identical tile loop
+    (dot -> live-count mask -> running ``lax.top_k`` merge) unrolled in
+    jnp, so kernel and oracle are bit-equal in interpret mode and share
+    the tie contract (descending score, ties by ascending record index).
+
+    qm: (Qp, D) f32; recs: (Np, D) f32 or int8 (Np % TILE_N == 0);
+    scales: (Np, D // qblock) f32 for int8 recs, None for f32; n: ()
+    live count. Returns (scores (Qp, TOPK_LANES), idx (Qp, TOPK_LANES)).
+    """
+    from repro.kernels.topk_similarity import TILE_N, TOPK_LANES
+
+    Qp, D = qm.shape
+    Np = recs.shape[0]
+    assert Np % TILE_N == 0, (Np, TILE_N)
+    n = jnp.asarray(n, jnp.int32)
+    scores = jnp.full((Qp, TOPK_LANES), -jnp.inf, jnp.float32)
+    idx = jnp.zeros((Qp, TOPK_LANES), jnp.int32)
+    for i in range(Np // TILE_N):
+        rec = recs[i * TILE_N:(i + 1) * TILE_N]
+        if scales is not None:
+            qblock = D // scales.shape[1]
+            rec = rec.astype(jnp.float32) * jnp.repeat(
+                scales[i * TILE_N:(i + 1) * TILE_N].astype(jnp.float32),
+                qblock, axis=1)
+        s = jnp.dot(qm, rec.T, preferred_element_type=jnp.float32)
+        pos = jax.lax.broadcasted_iota(jnp.int32, (Qp, TILE_N), 1) + \
+            i * TILE_N
+        s = jnp.where(pos < n, s, -jnp.inf)
+        cand_s = jnp.concatenate([scores, s], axis=1)
+        cand_i = jnp.concatenate([idx, pos], axis=1)
+        v, a = jax.lax.top_k(cand_s, TOPK_LANES)
+        scores = v
+        idx = jnp.take_along_axis(cand_i, a, axis=1)
+    return scores, idx
+
+
 def qmatmul_ref(x: jnp.ndarray, w_q: jnp.ndarray,
                 scale: jnp.ndarray) -> jnp.ndarray:
     """x (M, K) f32/bf16 @ dequant(w_q (K, N) int8, scale (N,)) -> (M, N) f32."""

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: fused batched similarity + running top-k retrieval.
+
+The RAG control plane's hot query (DESIGN.md §10): score a (Q, D) batch
+of unit-norm query embeddings against the arena's (N, D) record slab and
+return each query's k best records — without ever materialising the
+(Q, N) score matrix. One sequential pass over (TILE_N, D) record tiles:
+
+    for each record tile i:
+        s      = q @ tile.T                  (MXU; cosine via unit norms)
+        s     |= -inf past the live count    (arena capacity padding)
+        topk   = top_k([topk_scores | s])    (running (Q, KP) merge)
+
+The running top-k (scores + record indices) lives in the two output refs,
+revisited every grid step — the same sequential-grid accumulation pattern
+as ``ota_fused``'s sum-of-squares. int8 arena tiles (the blockwise
+storage class of ``retrieval/arena.py``) are dequantized in-pass from
+their (TILE_N, D/qblock) scale-grid slice, so the HBM read of an int8
+store is ~1/3.8 of the f32 slab.
+
+Tie contract (the bit-equality anchor): descending score, equal scores by
+ascending record index. ``jax.lax.top_k`` keeps the lower candidate
+position on ties, and every merge concatenates the running list (all
+indices from earlier tiles, already tie-ordered) before the current tile
+(ascending positions), so the invariant holds inductively and the result
+is exactly the top-k a stable brute-force scan produces. The jnp oracle
+(``ref.topk_similarity_ref``) replays the identical tile loop, so kernel
+and oracle are bit-equal in interpret mode.
+
+The live record count ``n`` is a *traced* scalar: the arena hands the
+kernel its zero-padded capacity slab, so the jit cache keys on
+(Q-pad, capacity, D, k, storage class) and appends never recompile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 256  # records per grid step; arena capacity is a multiple
+TOPK_LANES = 128  # running top-k width (one lane tile); k <= TOPK_LANES
+
+
+def _merge_topk(score_ref, idx_ref, s, pos, i):
+    """Fold one tile's (Q, T) scores into the running (Q, KP) top-k."""
+    @pl.when(i == 0)
+    def _init():
+        score_ref[...] = jnp.full(score_ref.shape, -jnp.inf, jnp.float32)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, jnp.int32)
+
+    cand_s = jnp.concatenate([score_ref[...], s], axis=1)
+    cand_i = jnp.concatenate([idx_ref[...], pos], axis=1)
+    v, a = jax.lax.top_k(cand_s, score_ref.shape[1])
+    score_ref[...] = v
+    idx_ref[...] = jnp.take_along_axis(cand_i, a, axis=1)
+
+
+def _tile_scores(q, rec, i, n):
+    s = jnp.dot(q, rec.T, preferred_element_type=jnp.float32)
+    Qp, T = s.shape
+    pos = jax.lax.broadcasted_iota(jnp.int32, (Qp, T), 1) + i * T
+    return jnp.where(pos < n, s, -jnp.inf), pos
+
+
+def _topk_f32_kernel(n_ref, q_ref, r_ref, score_ref, idx_ref):
+    i = pl.program_id(0)
+    s, pos = _tile_scores(q_ref[...], r_ref[...], i, n_ref[0, 0])
+    _merge_topk(score_ref, idx_ref, s, pos, i)
+
+
+def _topk_int8_kernel(n_ref, q_ref, r_ref, s_ref, score_ref, idx_ref, *,
+                      qblock):
+    """int8 variant: dequantize the record tile in-VMEM from its blockwise
+    scale slice (``qblock`` dims per scale, the arena storage class)."""
+    i = pl.program_id(0)
+    rec = r_ref[...].astype(jnp.float32) * jnp.repeat(
+        s_ref[...].astype(jnp.float32), qblock, axis=1)
+    s, pos = _tile_scores(q_ref[...], rec, i, n_ref[0, 0])
+    _merge_topk(score_ref, idx_ref, s, pos, i)
+
+
+def topk_similarity_2d(qm, recs, scales, n, *, interpret: bool = False):
+    """qm: (Qp, D) f32 queries; recs: (Np, D) f32 or int8 record slab with
+    Np % TILE_N == 0 (the arena capacity buffer, zero-padded); scales:
+    (Np, D // qblock) f32 scale grid for int8 recs, None for f32; n: ()
+    live record count (positions >= n score -inf).
+
+    Returns (scores (Qp, TOPK_LANES) f32, idx (Qp, TOPK_LANES) int32),
+    each row sorted by the tie contract; entries past min(n, TOPK_LANES)
+    are -inf. ``jax.lax.top_k`` inside the body is exercised in interpret
+    mode (the CPU contract of this repo); on real TPU it requires a
+    Mosaic lowering — fall back to the jnp oracle if unsupported.
+    """
+    Qp, D = qm.shape
+    Np = recs.shape[0]
+    assert Np % TILE_N == 0, (Np, TILE_N)
+    grid = (Np // TILE_N,)
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    qspec = pl.BlockSpec((Qp, D), lambda i: (0, 0))
+    rspec = pl.BlockSpec((TILE_N, D), lambda i: (i, 0))
+    out_specs = [
+        pl.BlockSpec((Qp, TOPK_LANES), lambda i: (0, 0)),
+        pl.BlockSpec((Qp, TOPK_LANES), lambda i: (0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((Qp, TOPK_LANES), jnp.float32),
+        jax.ShapeDtypeStruct((Qp, TOPK_LANES), jnp.int32),
+    ]
+    n2d = jnp.asarray(n, jnp.int32).reshape(1, 1)
+    if recs.dtype == jnp.int8:
+        nb = scales.shape[1]
+        assert D % nb == 0, (D, nb)
+        sspec = pl.BlockSpec((TILE_N, nb), lambda i: (i, 0))
+        return pl.pallas_call(
+            functools.partial(_topk_int8_kernel, qblock=D // nb),
+            grid=grid,
+            in_specs=[scalar, qspec, rspec, sspec],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(n2d, qm, recs, scales)
+    return pl.pallas_call(
+        _topk_f32_kernel,
+        grid=grid,
+        in_specs=[scalar, qspec, rspec],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(n2d, qm, recs)

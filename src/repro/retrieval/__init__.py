@@ -1,0 +1,8 @@
+from repro.retrieval.arena import ArenaStore
+from repro.retrieval.engine import (
+    RetrievalEngine,
+    brute_force_topk,
+    normalize_rows,
+    stable_topk,
+)
+from repro.retrieval.store import ArenaVectorStore
