@@ -251,6 +251,23 @@ def smoke() -> int:
     return 0
 
 
+def json_report() -> dict:
+    """Machine-readable smoke-scale numbers (benchmarks/run.py --json)."""
+    K, M = 6, 1 << 14
+    legacy_s, flat_s, packed_s, wire, speed = bench_pair(K, M, reps=2)
+    ratio = bench_4bit_wire(K=4, M=M, block=packing.QUANT_BLOCK)
+    errs = quant_error_report(M=M)
+    return {
+        "K": K, "M": M,
+        "legacy_ms": legacy_s * 1e3, "flat_ms": flat_s * 1e3,
+        "packed_ms": packed_s * 1e3, "speedup": speed,
+        "mixed_cohort_wire_ratio": wire,
+        "int4_wire_ratio": ratio, "int4_wire_bar": 1 / 7,
+        "quant_mse": {str(b): {"per_row": e[0], "blockwise": e[1]}
+                      for b, e in errs.items()},
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",

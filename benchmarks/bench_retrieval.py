@@ -147,6 +147,18 @@ def smoke() -> int:
     return 0
 
 
+def json_report() -> dict:
+    """Machine-readable smoke-scale numbers (benchmarks/run.py --json)."""
+    n, k_cohort = 20_000, 16
+    legacy_s, batched_s, speedup, ratio = bench_pair(n, k_cohort, reps=2)
+    return {
+        "N": n, "K": k_cohort,
+        "legacy_ms": legacy_s * 1e3, "batched_ms": batched_s * 1e3,
+        "speedup": speedup,
+        "int8_mem_ratio": ratio, "int8_mem_bar": 0.3,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",

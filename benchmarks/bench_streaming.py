@@ -1,0 +1,217 @@
+"""Streaming vs synchronous OTA rounds: goodput under straggler tails.
+
+The synchronous barrier (``FLServer.run_round``) pays max-of-K latency
+every round — with a lognormal compute tail the slowest of 64 clients
+lands at ~15x the median — and a single silent dropout stalls the round
+to the straggler timeout. The buffered engine (``StreamingFLServer``,
+DESIGN.md §11) fires at cohort-fill or deadline and folds arrivals into
+a persistent ``ota.OtaAccumulator``, so round time tracks the fill
+quantile instead of the max.
+
+This bench runs the *arrival simulation* (``fl.client.LatencyModel`` on
+a ``make_fleet`` device population + ``fl.server.plan_stream``) over
+many rounds and reports **goodput** — counted uplink rows per simulated
+second — for both round disciplines, sweeping the straggler tail
+(p95/p50 compute ratio) and the silent-dropout rate. The synchronous
+baseline aggregates everyone when the last report lands, or at the
+straggler timeout when someone never reports; the streaming engine gets
+the same timeout as its deadline, a fill target, and a grace window
+(late rows count, staleness-discounted — the discount does not change
+goodput accounting, a counted row is a counted row).
+
+``--smoke`` is the CI mode (scripts/tier1.sh), asserting the PR's two
+acceptance bars:
+
+- **equivalence**: folding one round's packed cohort through
+  ``OtaAccumulator`` (no deadline, identical arrival set, cohort order)
+  is bit-equal to the one-shot ``ota.ota_aggregate_packed`` — jnp oracle
+  AND Pallas fold kernel paths;
+- **goodput**: under a heavy tail (p95 = 5x median) with 10% silent
+  dropout at K = 64, streaming goodput >= 2x the synchronous baseline.
+
+Usage: python benchmarks/bench_streaming.py [--csv] [--smoke] [--rounds N]
+Runnable standalone (self-locates ``src/``) or via scripts/tier1.sh.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import pathlib
+import sys
+
+try:
+    import repro  # noqa: F401  (importability probe)
+except ImportError:  # standalone invocation: put <repo>/src on sys.path
+    sys.path.insert(
+        0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ota, packing
+from repro.core.profiling.hardware import make_fleet
+from repro.fl.client import LatencyModel
+from repro.fl.server import plan_stream, round_rng
+
+K_DEFAULT = 64
+FILL_FRACTION = 0.75   # streaming trigger: 3/4 of the cohort has landed
+TIMEOUT_MULT = 20.0    # straggler timeout, x cohort median arrival
+GRACE_MULT = 2.0       # grace window, x cohort median arrival
+
+TAIL_SWEEP = [2.0, 5.0, 10.0]     # p95/p50 compute-latency ratios
+DROP_SWEEP = [0.0, 0.1, 0.3]      # silent never-reports probability
+
+
+# ---------------------------------------------------------------------------
+# arrival simulation -> goodput
+# ---------------------------------------------------------------------------
+
+
+def simulate_round(fleet, lat: LatencyModel, rng,
+                   uplink_bytes: int = 1 << 16):
+    """One round's simulated arrival times (inf = silent dropout)."""
+    times = []
+    for spec in fleet:
+        t = lat.sample(spec, rng, uplink_bytes=uplink_bytes)
+        times.append(math.inf if lat.dropped(spec, rng) else t)
+    return times
+
+
+def goodput_pair(K: int, tail: float, drop: float, *, rounds: int = 20,
+                 fill_fraction: float = FILL_FRACTION, seed: int = 0):
+    """Simulate ``rounds`` rounds; return (sync_goodput, stream_goodput,
+    ratio) in rows/second.
+
+    Both disciplines see the *identical* arrival sets. Synchronous: the
+    round ends at the last report, or at the straggler timeout
+    (TIMEOUT_MULT x the cohort's median arrival) when anyone never
+    reports; every arrived row counts. Streaming: trigger at the
+    ``fill_fraction`` quantile or the same timeout (as deadline), grace
+    window GRACE_MULT x median; counted = on-time + late.
+    """
+    fleet = make_fleet(K, seed=seed)
+    lat = LatencyModel.with_tail(tail, drop_prob=drop)
+    sync_rows = sync_t = stream_rows = stream_t = 0.0
+    for r in range(rounds):
+        times = simulate_round(fleet, lat, round_rng(seed, r, salt=6151))
+        finite = sorted(t for t in times if math.isfinite(t))
+        if not finite:  # everyone silently dropped: both burn the timeout
+            continue
+        med = finite[len(finite) // 2]
+        timeout = TIMEOUT_MULT * med
+        # synchronous barrier: all reports in, or straggler timeout
+        t_sync = max(finite) if len(finite) == K else timeout
+        sync_rows += sum(1 for t in finite if t <= t_sync)
+        sync_t += min(t_sync, timeout)
+        # streaming: fill-or-deadline trigger + grace window
+        plan = plan_stream(times, fill=max(1, math.ceil(fill_fraction * K)),
+                           deadline=timeout, grace=GRACE_MULT * med)
+        stream_rows += len(plan.counted)
+        stream_t += plan.t_close
+    sync_g = sync_rows / max(sync_t, 1e-12)
+    stream_g = stream_rows / max(stream_t, 1e-12)
+    return sync_g, stream_g, stream_g / max(sync_g, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# accumulator equivalence (the correctness half of the smoke bar)
+# ---------------------------------------------------------------------------
+
+
+def _packed_cohort(K: int, M: int, seed: int = 0):
+    """Synthetic mixed-precision packed cohort + layout + weights."""
+    rng = np.random.RandomState(seed)
+    tree = {"w": jnp.asarray(rng.randn(M).astype(np.float32) * 0.01)}
+    layout = packing.make_layout(tree)
+    bits = [(4, 8, 8, 16, 32)[i % 5] for i in range(K)]
+    weights = [1.0 + (i % 3) for i in range(K)]
+    key = jax.random.key(seed + 11)
+    sr = ota.derive_sr_seed(key)
+    rows = []
+    for i, b in enumerate(bits):
+        up = {"w": jnp.asarray(rng.randn(M).astype(np.float32) * 0.01)}
+        rows.append(ota.quantize_uplink(packing.pack(up, layout), b, sr, i,
+                                        block=packing.QUANT_BLOCK))
+    return rows, weights, layout, key
+
+
+def check_accumulator_equivalence(K: int = 6, M: int = 1 << 14) -> None:
+    """Assert OtaAccumulator (one batch, cohort order) == one-shot path,
+    bit-for-bit, on both the jnp-oracle and Pallas-kernel folds."""
+    rows, weights, layout, key = _packed_cohort(K, M)
+    cfg = ota.OTAConfig(snr_db=20.0)
+    for use_kernel in (False, True):
+        ref, _ = ota.ota_aggregate_packed(key, rows, None, weights, layout,
+                                          cfg, use_kernel=use_kernel)
+        _, _, w = ota.round_channel(key, jnp.asarray(weights, jnp.float32),
+                                    cfg=cfg)
+        acc = ota.OtaAccumulator(layout, cfg, use_kernel=use_kernel)
+        got, _ = acc.fold(rows, w).finalize(key)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def smoke() -> int:
+    """CI mode: equivalence + goodput acceptance bars (~seconds)."""
+    check_accumulator_equivalence()
+    ratios = []
+    for seed in range(3):
+        _, _, ratio = goodput_pair(K_DEFAULT, tail=5.0, drop=0.1,
+                                   rounds=10, seed=seed)
+        ratios.append(ratio)
+    mean_ratio = float(np.mean(ratios))
+    assert mean_ratio >= 2.0, \
+        f"streaming goodput {mean_ratio:.2f}x sync, below the 2x bar"
+    print(f"smoke OK: OtaAccumulator == ota_aggregate_packed bit-equal "
+          f"(oracle + kernel folds); streaming goodput {mean_ratio:.2f}x "
+          f"sync at K={K_DEFAULT}, tail p95/p50=5, drop=10% (bar: >= 2x)")
+    return 0
+
+
+def json_report() -> dict:
+    """Machine-readable smoke-scale numbers (benchmarks/run.py --json)."""
+    sync_g, stream_g, ratio = goodput_pair(K_DEFAULT, tail=5.0, drop=0.1,
+                                           rounds=10)
+    return {
+        "K": K_DEFAULT, "tail_p95_over_p50": 5.0, "drop_prob": 0.1,
+        "fill_fraction": FILL_FRACTION,
+        "sync_goodput_rows_per_s": sync_g,
+        "stream_goodput_rows_per_s": stream_g,
+        "goodput_ratio": ratio, "goodput_bar": 2.0,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: equivalence + goodput asserts")
+    ap.add_argument("--rounds", type=int, default=20,
+                    help="simulated rounds per sweep cell")
+    args = ap.parse_args()
+
+    if args.smoke:
+        raise SystemExit(smoke())
+
+    check_accumulator_equivalence()
+    print("accumulator == one-shot aggregate: bit-equal (oracle + kernel)")
+    if args.csv:
+        print("K,tail,drop,sync_rows_per_s,stream_rows_per_s,ratio")
+    else:
+        print(f"{'K':>4} {'tail':>5} {'drop':>5} {'sync_g':>9} "
+              f"{'stream_g':>9} {'ratio':>7}")
+    for tail in TAIL_SWEEP:
+        for drop in DROP_SWEEP:
+            sync_g, stream_g, ratio = goodput_pair(
+                K_DEFAULT, tail, drop, rounds=args.rounds)
+            if args.csv:
+                print(f"{K_DEFAULT},{tail},{drop},{sync_g:.2f},"
+                      f"{stream_g:.2f},{ratio:.2f}")
+            else:
+                print(f"{K_DEFAULT:>4} {tail:>5.1f} {drop:>5.2f} "
+                      f"{sync_g:>9.2f} {stream_g:>9.2f} {ratio:>6.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,8 +3,40 @@ assignment's roofline table. Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --quick    # skip FL training
+  PYTHONPATH=src python -m benchmarks.run --json     # BENCH_<name>.json
+
+``--json`` skips the CSV sweeps and instead writes one
+``BENCH_<name>.json`` per data-plane bench (aggregation, retrieval,
+streaming) into the working directory — smoke-scale timings plus the
+acceptance-bar values each bench's ``--smoke`` mode asserts, for
+machine consumption (dashboards, regression diffs).
 """
+import sys
+from pathlib import Path
+
+# self-locate: `python benchmarks/run.py` works like `python -m
+# benchmarks.run` (repo root for the benchmarks package, src/ for repro)
+_ROOT = Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 import argparse
+import json
+
+
+def _write_json() -> None:
+    from benchmarks import (bench_aggregation, bench_retrieval,
+                            bench_streaming)
+
+    for name, mod in [("aggregation", bench_aggregation),
+                      ("retrieval", bench_retrieval),
+                      ("streaming", bench_streaming)]:
+        path = f"BENCH_{name}.json"
+        with open(path, "w") as f:
+            json.dump(mod.json_report(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
 
 
 def main() -> None:
@@ -12,7 +44,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the FL-training benchmark (Fig. 4)")
     ap.add_argument("--fig4-rounds", type=int, default=10)
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<name>.json reports instead of CSV")
     args = ap.parse_args()
+
+    if args.json:
+        _write_json()
+        return
 
     print("name,us_per_call,derived")
     from benchmarks import bench_kernels

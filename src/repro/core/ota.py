@@ -231,14 +231,25 @@ def ota_aggregate_flat(key, X: jnp.ndarray, bits: jnp.ndarray,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def _round_channel(key, weights, *, cfg: OTAConfig):
-    """Channel draw + FedAvg weight renormalisation (cache keys on K)."""
+def round_channel(key, weights, *, cfg: OTAConfig):
+    """Channel draw + FedAvg weight renormalisation (cache keys on K).
+
+    Returns (habs, participate, w) with ``w`` the participation-masked,
+    renormalised combining weights in the order of ``weights``. Public
+    because the streaming round loop (``fl/server.py``, DESIGN.md §11)
+    draws the channel itself at trigger time and hands the final weights
+    to ``OtaAccumulator.fold`` — same key split as the one-shot paths,
+    so a no-deadline streaming round reproduces their draws exactly.
+    """
     k_chan, _, _ = jax.random.split(key, 3)
     habs, participate = sample_channel(k_chan, weights.shape[0],
                                        cfg.fade_threshold)
     w = jnp.asarray(weights, jnp.float32) * participate
     w = w / jnp.maximum(jnp.sum(w), 1e-12)
     return habs, participate, w
+
+
+_round_channel = round_channel  # internal alias (pre-§11 name)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n_valid"))
@@ -257,6 +268,35 @@ def _awgn_epilogue(key, acc, *, cfg: OTAConfig, n_valid: int):
 
 _packed_ref_jit = jax.jit(kref.ota_packed_ref,
                           static_argnames=("qblock", "packed4"))
+_fold_ref_jit = jax.jit(kref.ota_fold_ref,
+                        static_argnames=("qblock", "packed4"))
+
+
+def _fold_groups(acc, kinds, datas, scales, wg, *, use_kernel: bool):
+    """Fold grouped micro-batches into the running superposition ``acc``.
+
+    kinds/datas/scales as produced by ``_group_rows``; ``wg`` the final
+    combining weights in group order. ``acc`` = None starts a fresh
+    accumulator: the first group's partial *is* the state (no add with a
+    zeros vector), every later group folds in via the fold kernel /
+    oracle (``kernels.ota_fold_packed`` / ``ref.ota_fold_ref``) — the
+    exact left-associated group sum the pre-§11 barrier loop computed,
+    so the synchronous path and a single-batch streaming fold are
+    bit-identical by construction.
+    """
+    off = 0
+    for (kind, qblock), data, scale in zip(kinds, datas, scales):
+        kg = scale.shape[0]
+        wseg = jax.lax.slice_in_dim(wg, off, off + kg)
+        off += kg
+        packed4 = kind == "int4"
+        if acc is None:
+            fn = kops.ota_dequant_superpose if use_kernel else _packed_ref_jit
+            acc = fn(data, scale, wseg, qblock=qblock, packed4=packed4)
+        else:
+            fn = kops.ota_fold_packed if use_kernel else _fold_ref_jit
+            acc = fn(acc, data, scale, wseg, qblock=qblock, packed4=packed4)
+    return acc
 
 
 def _aggregate_rows_flat(key, datas, scales, perm, weights, *,
@@ -270,33 +310,23 @@ def _aggregate_rows_flat(key, datas, scales, perm, weights, *,
     of (storage class, qblock) group keys (qblock = 0: per-update
     scales); ``perm`` maps group order back to the cohort's original row
     order (weights/channel stay in cohort order). One fused
-    dequant->superpose pass per storage group (``kernels.ota_packed_2d``
-    / ``ref.ota_packed_ref``), then the shared AWGN epilogue on the
-    combined aggregate — same channel, weight renormalisation, and
-    noise-draw semantics as ``ota_aggregate_flat``.
+    dequant->superpose fold per storage group (``_fold_groups`` — the
+    same persistent-accumulator primitive the streaming engine uses,
+    DESIGN.md §11), then the shared AWGN epilogue on the combined
+    aggregate — same channel, weight renormalisation, and noise-draw
+    semantics as ``ota_aggregate_flat``.
 
     Deliberately NOT one jitted program: the group composition (which
     kinds, how many rows each) changes round to round with the planner's
     bit decisions and dropouts, and a composition-keyed jit would retrace
     per distinct mix. Instead the pieces are jitted on small key spaces —
-    channel on K, each group pass on (Kg, kind, qblock), epilogue on
+    channel on K, each group fold on (Kg, kind, qblock), epilogue on
     (M, n_valid) — so a varying cohort reuses compiled code across
     rounds.
     """
-    habs, participate, w = _round_channel(key, weights, cfg=cfg)
+    habs, participate, w = round_channel(key, weights, cfg=cfg)
     wg = w[perm]  # group-order view of the cohort weights
-
-    acc = None
-    off = 0
-    for (kind, qblock), data, scale in zip(kinds, datas, scales):
-        kg = scale.shape[0]
-        wseg = jax.lax.slice_in_dim(wg, off, off + kg)
-        off += kg
-        fn = kops.ota_dequant_superpose if use_kernel else _packed_ref_jit
-        part = fn(data, scale, wseg, qblock=qblock,
-                  packed4=(kind == "int4"))
-        acc = part if acc is None else acc + part
-
+    acc = _fold_groups(None, kinds, datas, scales, wg, use_kernel=use_kernel)
     y, noise_std = _awgn_epilogue(key, acc, cfg=cfg, n_valid=n_valid)
     return y, habs, participate, noise_std
 
@@ -327,6 +357,114 @@ def _group_rows(rows: Sequence[packing.PackedRow]):
         i += len(grp)
     return (tuple(kinds), tuple(datas), tuple(scales),
             jnp.asarray(perm, jnp.int32))
+
+
+def staleness_weights(delays, grace: float, *,
+                      gamma: float = 0.5) -> jnp.ndarray:
+    """Staleness discount for rows arriving ``delays`` seconds after the
+    round's aggregation trigger (DESIGN.md §11).
+
+    Exponential in the normalised lag: gamma ** (delay / grace), so a row
+    landing right at the trigger keeps weight ~1 and one landing at the
+    end of the grace window keeps ``gamma``. Clipped to [gamma, 1] —
+    rows past the grace window should not be folded at all (the round
+    plan drops them), so the discount never decays below the end-of-
+    window value.
+    """
+    d = jnp.asarray(delays, jnp.float32)
+    g = jnp.float32(max(float(grace), 1e-9))
+    return jnp.clip(jnp.float32(gamma) ** (d / g), min(gamma, 1.0), 1.0)
+
+
+class OtaAccumulator:
+    """Persistent superposition accumulator for streaming rounds
+    (DESIGN.md §11).
+
+    Owns the running (padded_size,) pre-noise aggregate the buffered
+    round loop folds arrivals into: ``fold`` takes one micro-batch of
+    ``packing.PackedRow`` uplinks with their *final* combining weights
+    (participation-masked and renormalised — see ``round_channel`` — and
+    optionally staleness-discounted), groups it by (storage class,
+    qblock) exactly like the one-shot path, and folds each group through
+    the fused fold kernel / oracle. ``finalize`` runs the shared AWGN
+    epilogue (the aggregate's norm state — the noise-power calibration
+    input — is derived from the persistent accumulator itself, the same
+    jitted program the barrier path uses) and unpacks to the update
+    pytree.
+
+    Equivalence contract: folding the whole arrival set as ONE batch, in
+    cohort order, with ``round_channel``-normalised weights and the same
+    round key, is bit-identical to ``ota_aggregate_packed`` — the
+    synchronous path *is* ``_fold_groups`` now, so the no-deadline
+    streaming round and the barrier round run the same float ops in the
+    same order. Multi-batch folds (the async path: late arrivals folding
+    in after the trigger) left-associate batch partials instead, which
+    is the documented semantic difference, not a bug.
+    """
+
+    def __init__(self, layout: packing.Layout, cfg: OTAConfig = OTAConfig(),
+                 *, use_kernel: Optional[bool] = None):
+        self.layout = layout
+        self.cfg = cfg
+        self.use_kernel = (_use_kernel_default() if use_kernel is None
+                           else use_kernel)
+        self.reset()
+
+    def reset(self) -> None:
+        """Clear the running state (fresh round)."""
+        self._acc = None
+        self.n_folded = 0
+        self.wire_bytes = 0
+
+    @property
+    def accumulator(self) -> jnp.ndarray:
+        """The running (padded_size,) pre-noise aggregate (zeros before
+        any fold)."""
+        if self._acc is None:
+            return jnp.zeros((self.layout.padded_size,), jnp.float32)
+        return self._acc
+
+    def fold(self, rows: Sequence[packing.PackedRow], weights,
+             *, staleness=None) -> "OtaAccumulator":
+        """Fold one micro-batch of packed uplink rows into the state.
+
+        weights: final per-row combining weights (already channel-masked
+        and renormalised by the caller); ``staleness``: optional per-row
+        discount multipliers (``staleness_weights``) for late arrivals.
+        Rows are grouped by (storage class, qblock) and each group runs
+        one fused fold pass — no (K, M) f32 matrix ever materialises.
+        Returns self for chaining: fold(fold(state, b0), b1)...
+        """
+        if len(rows) == 0:
+            return self
+        w = jnp.asarray(weights, jnp.float32)
+        if staleness is not None:
+            w = w * jnp.asarray(staleness, jnp.float32)
+        kinds, datas, scales, perm = _group_rows(rows)
+        self._acc = _fold_groups(self._acc, kinds, datas, scales, w[perm],
+                                 use_kernel=self.use_kernel)
+        self.n_folded += len(rows)
+        self.wire_bytes += int(sum(r.wire_nbytes for r in rows))
+        return self
+
+    def finalize(self, key) -> Tuple[Pytree, Dict[str, Any]]:
+        """AWGN epilogue on the accumulated superposition.
+
+        Same key-split, noise draw, and norm calibration as the one-shot
+        paths (``_awgn_epilogue``). Returns (update pytree with f32
+        leaves, info dict); the accumulator stays intact — call
+        ``reset`` to start the next round.
+        """
+        assert self._acc is not None, "finalize() before any fold()"
+        y, noise_std = _awgn_epilogue(key, self._acc, cfg=self.cfg,
+                                      n_valid=self.layout.size)
+        info = {
+            "noise_std": float(noise_std),
+            "n_folded": self.n_folded,
+            "uplink_bytes": self.wire_bytes,
+            "uplink_bytes_f32": 4 * self.layout.padded_size * self.n_folded,
+        }
+        return packing.unpack(y, self.layout, cast=False), info
 
 
 def _info_dict(habs, participate, noise_std) -> Dict[str, Any]:

@@ -1,2 +1,11 @@
-from repro.fl.client import FLClient  # noqa: F401
-from repro.fl.server import FLServer, RoundLog, make_planner  # noqa: F401
+from repro.fl.client import FLClient, LatencyModel  # noqa: F401
+from repro.fl.server import (  # noqa: F401
+    FLServer,
+    RoundLog,
+    StreamingFLServer,
+    StreamPlan,
+    StreamRoundLog,
+    make_planner,
+    plan_stream,
+    round_rng,
+)

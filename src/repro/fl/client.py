@@ -11,7 +11,13 @@ into the (K, M) aggregation matrix. With the round's dither seed as well,
 the client also *quantizes and bit-packs* its row (``ota.quantize_uplink``
 -> ``packing.PackedRow``): a 4-bit client's uplink is two symbols per
 byte + one f32 scale, 1/8 the f32 row (DESIGN.md §6).
+
+The module also hosts the seeded ``LatencyModel`` — per-client lognormal
+compute + uplink delay derived from the ``DeviceSpec`` — that gives every
+uplink a simulated arrival time for the streaming round loop
+(DESIGN.md §11).
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -37,6 +43,73 @@ Pytree = Any
 _STEP_CACHE: Dict[Tuple[str, int, float], Tuple[Callable, Any]] = {}
 
 
+# simulated uplink rate per device class (Mbit/s). ``DeviceSpec`` carries
+# no radio field, so the device class is the proxy: flagships and laptops
+# on good WiFi/5G, IoT hubs on constrained links.
+UPLINK_MBPS: Dict[str, float] = {
+    "flagship_phone": 20.0,
+    "midrange_phone": 10.0,
+    "smart_speaker": 8.0,
+    "iot_hub": 2.0,
+    "laptop": 40.0,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    """Seeded per-round client latency + dropout simulation (DESIGN.md
+    §11).
+
+    Gives every uplink an arrival *time* so the streaming round loop has
+    an order and a clock. Compute time is the round's training work over
+    the device's sustained flops (``DeviceSpec.cpu_gflops``) times a
+    lognormal multiplier — ``sigma`` tunes the straggler tail, with
+    p95/p50 = exp(1.645 * sigma). Uplink time is the packed row's wire
+    bytes over the device class's link rate (``UPLINK_MBPS``) with its
+    own (lighter) lognormal jitter. Low-battery devices throttle by
+    ``low_battery_slowdown``. ``drop_prob`` is the per-round
+    never-reports probability (doubled on low battery) — the scheduling
+    simulation's dropout knob, on top of ``FLConfig.dropout_prob`` which
+    the training loop itself applies. All draws come from the caller's
+    ``numpy.random.RandomState``, so a seeded round replays exactly.
+    """
+
+    work_flops: float = 5e9  # proxy for local_steps x batch x model cost
+    sigma: float = 0.6  # compute lognormal spread (straggler tail)
+    net_sigma: float = 0.25  # uplink jitter
+    low_battery_slowdown: float = 2.0
+    drop_prob: float = 0.0
+
+    @classmethod
+    def with_tail(cls, p95_over_p50: float, **kw) -> "LatencyModel":
+        """Model whose compute-latency p95/p50 ratio is the given tail."""
+        import math
+
+        return cls(sigma=math.log(p95_over_p50) / 1.645, **kw)
+
+    def p95_over_p50(self) -> float:
+        return float(np.exp(1.645 * self.sigma))
+
+    def sample(
+        self, spec: DeviceSpec, rng: np.random.RandomState, *, uplink_bytes: int
+    ) -> float:
+        """One arrival latency (seconds) for this device and uplink."""
+        compute = self.work_flops / (spec.cpu_gflops * 1e9)
+        if spec.power_state == "low_battery":
+            compute *= self.low_battery_slowdown
+        compute *= rng.lognormal(0.0, self.sigma)
+        rate = UPLINK_MBPS.get(spec.device_class, 10.0) * 1e6 / 8.0
+        uplink = (uplink_bytes / rate) * rng.lognormal(0.0, self.net_sigma)
+        return float(compute + uplink)
+
+    def dropped(self, spec: DeviceSpec, rng: np.random.RandomState) -> bool:
+        """Whether this client silently never reports this round."""
+        p = self.drop_prob
+        if spec.power_state == "low_battery":
+            p = min(1.0, 2.0 * p)
+        return p > 0 and bool(rng.rand() < p)
+
+
 @dataclasses.dataclass
 class FLClient:
     user: UserTruth
@@ -44,22 +117,33 @@ class FLClient:
     shard: ClientShard
     model: Model
 
-    def _step_fn(self, bits: int, lr: float,
-                 fedprox_mu: float = 0.0) -> Tuple[Callable, Any]:
+    def _step_fn(
+        self, bits: int, lr: float, fedprox_mu: float = 0.0
+    ) -> Tuple[Callable, Any]:
         key = (self.model.cfg.name, bits, lr, fedprox_mu)
         if key not in _STEP_CACHE:
             opt = sgd(lr)
-            step = make_quantized_train_step(self.model, opt, bits,
-                                             fedprox_mu=fedprox_mu)
+            step = make_quantized_train_step(
+                self.model, opt, bits, fedprox_mu=fedprox_mu
+            )
             _STEP_CACHE[key] = (jax.jit(step), opt)
         return _STEP_CACHE[key]
 
     def local_update(
-        self, global_params: Pytree, bits: int, *,
-        local_steps: int = 4, local_batch: int = 8, lr: float = 5e-4,
-        seed: int = 0, max_frames: int = 320, max_labels: int = 40,
-        fedprox_mu: float = 0.0, layout: Optional[packing.Layout] = None,
-        sr_seed: Optional[jnp.ndarray] = None, uplink_row: int = 0,
+        self,
+        global_params: Pytree,
+        bits: int,
+        *,
+        local_steps: int = 4,
+        local_batch: int = 8,
+        lr: float = 5e-4,
+        seed: int = 0,
+        max_frames: int = 320,
+        max_labels: int = 40,
+        fedprox_mu: float = 0.0,
+        layout: Optional[packing.Layout] = None,
+        sr_seed: Optional[jnp.ndarray] = None,
+        uplink_row: int = 0,
         quant_block: int = 0,
     ) -> Tuple[Any, Dict[str, float]]:
         """Run local steps; return (delta, metrics).
@@ -77,8 +161,11 @@ class FLClient:
         ``layout``: the parameter-delta pytree (legacy shape).
         """
         jitted, opt = self._step_fn(bits, lr, fedprox_mu)
-        state = {"params": global_params, "opt": opt.init(global_params),
-                 "step": jnp.zeros((), jnp.int32)}
+        state = {
+            "params": global_params,
+            "opt": opt.init(global_params),
+            "step": jnp.zeros((), jnp.int32),
+        }
         if fedprox_mu > 0.0:
             state["anchor"] = global_params
         rng = np.random.RandomState(seed * 1009 + self.user.user_id)
@@ -86,21 +173,27 @@ class FLClient:
         utts = self.shard.utterances
         for s in range(local_steps):
             idx = rng.randint(0, len(utts), size=min(local_batch, len(utts)))
-            batch = batchify([utts[i] for i in idx],
-                             max_frames=max_frames, max_labels=max_labels)
+            batch = batchify(
+                [utts[i] for i in idx], max_frames=max_frames, max_labels=max_labels
+            )
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             state, metrics = jitted(state, batch)
             losses.append(float(metrics["loss"]))
         delta = jax.tree.map(
-            lambda new, old: (new.astype(jnp.float32)
-                              - old.astype(jnp.float32)),
-            state["params"], global_params)
+            lambda new, old: (new.astype(jnp.float32) - old.astype(jnp.float32)),
+            state["params"],
+            global_params,
+        )
         if layout is not None:
             delta = packing.pack(delta, layout)
             if sr_seed is not None:
                 from repro.core import ota
 
-                delta = ota.quantize_uplink(delta, bits, sr_seed,
-                                            uplink_row, block=quant_block)
-        return delta, {"loss_first": losses[0], "loss_last": losses[-1],
-                       "n_samples": len(utts)}
+                delta = ota.quantize_uplink(
+                    delta, bits, sr_seed, uplink_row, block=quant_block
+                )
+        return delta, {
+            "loss_first": losses[0],
+            "loss_last": losses[-1],
+            "n_samples": len(utts),
+        }

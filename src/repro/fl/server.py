@@ -1,11 +1,29 @@
 """The MP-OTA-FL server: client selection, multi-client quantization
 planning (via the paper's RAG planner or the unified baseline), OTA
 aggregation, and per-round feedback collection into the RAG databases.
+
+Two round loops share the same planning/training/feedback stages
+(DESIGN.md §11):
+
+- ``FLServer.run_round`` — the synchronous barrier: select -> all K
+  clients train -> one aggregation. Wall-clock per round is set by the
+  slowest straggler, and a single dropout stalls the whole cohort.
+- ``StreamingFLServer.run_round`` — the event-driven buffered engine:
+  every uplink gets a simulated arrival time (``fl/client.LatencyModel``),
+  aggregation fires on cohort-fill or deadline (``plan_stream``), rows
+  landing inside the grace window fold in late with a staleness
+  discount, and everything folds into one persistent
+  ``core/ota.OtaAccumulator``. With no deadline and a full fill target
+  the engine degenerates to the barrier and is bit-identical to the
+  synchronous path (the equivalence oracle).
 """
+
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+import math
+import random
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -14,13 +32,21 @@ import numpy as np
 from repro.configs.base import ArchConfig, FLConfig, get_arch
 from repro.core import ota, packing
 from repro.core.profiling.hardware import make_fleet
-from repro.core.profiling.planner import (BasePlanner, RAGPlanner,
-                                          UnifiedTierPlanner, plan_round)
-from repro.core.profiling.users import (drift_device, drift_user, make_users,
-                                        satisfaction_score, true_performance)
-from repro.data.voice import (Utterance, batchify, make_client_shard,
-                              make_eval_set)
-from repro.fl.client import FLClient
+from repro.core.profiling.planner import (
+    BasePlanner,
+    RAGPlanner,
+    UnifiedTierPlanner,
+    plan_round,
+)
+from repro.core.profiling.users import (
+    drift_device,
+    drift_user,
+    make_users,
+    satisfaction_score,
+    true_performance,
+)
+from repro.data.voice import Utterance, batchify, make_client_shard, make_eval_set
+from repro.fl.client import FLClient, LatencyModel
 from repro.models.deepspeech2 import ds2_greedy_decode
 from repro.models.registry import build_model
 
@@ -33,9 +59,23 @@ def make_planner(cfg: FLConfig) -> BasePlanner:
     if cfg.planner == "rag":
         return RAGPlanner(strategy=cfg.strategy, seed=cfg.seed)
     if cfg.planner == "rag_energy":
-        return RAGPlanner(strategy=cfg.strategy, energy_priority=8.0,
-                          seed=cfg.seed)
+        return RAGPlanner(strategy=cfg.strategy, energy_priority=8.0, seed=cfg.seed)
     raise ValueError(f"unknown planner {cfg.planner!r}")
+
+
+def round_rng(seed: int, rnd: int, salt: int = 1237) -> np.random.RandomState:
+    """Seeded per-round numpy RNG (dropout draws, latency draws, ...).
+
+    One helper shared by both round loops so a (seed, rnd, salt) triple
+    names exactly one stream — the streaming server's extra draws use
+    distinct salts and never perturb the synchronous streams.
+    """
+    return np.random.RandomState(seed * salt + rnd)
+
+
+def round_drift_rng(seed: int, rnd: int) -> random.Random:
+    """Seeded per-round stdlib RNG for the context/hardware drift stage."""
+    return random.Random(seed * 7919 + rnd)
 
 
 @dataclasses.dataclass
@@ -51,16 +91,25 @@ class RoundLog:
 class FLServer:
     """Owns the global model and runs the federated rounds."""
 
-    def __init__(self, fl_cfg: FLConfig, arch: Optional[ArchConfig] = None,
-                 *, shard_size: int = 24):
+    def __init__(
+        self,
+        fl_cfg: FLConfig,
+        arch: Optional[ArchConfig] = None,
+        *,
+        shard_size: int = 24,
+    ):
         self.cfg = fl_cfg
         self.arch = arch or get_arch("deepspeech2")
         self.model = build_model(self.arch)
         self.users = make_users(fl_cfg.n_clients, seed=fl_cfg.seed)
         self.fleet = make_fleet(fl_cfg.n_clients, seed=fl_cfg.seed)
         self.clients = [
-            FLClient(u, s, make_client_shard(u, base_size=shard_size,
-                                             seed=fl_cfg.seed), self.model)
+            FLClient(
+                u,
+                s,
+                make_client_shard(u, base_size=shard_size, seed=fl_cfg.seed),
+                self.model,
+            )
             for u, s in zip(self.users, self.fleet)
         ]
         self.planner = make_planner(fl_cfg)
@@ -78,48 +127,50 @@ class FLServer:
         start = (rnd * k) % n
         return [(start + i) % n for i in range(k)]
 
-    def run_round(self, rnd: int) -> RoundLog:
-        ids = self.select(rnd)
-        users = [self.users[i] for i in ids]
-        specs = [self.fleet[i] for i in ids]
+    # ---- round stages, shared by the synchronous and streaming loops ----
 
-        # ---- context / hardware drift (paper §III-A interview triggers 2/3):
+    def _apply_drift(self, rnd: int, users, specs) -> None:
+        # context / hardware drift (paper §III-A interview triggers 2/3):
         # users move devices, schedules shift, batteries drain — changed
         # clients get re-profiled by the planner's next interview pass.
-        import random as _random
-
-        drift_rng = _random.Random(self.cfg.seed * 7919 + rnd)
+        drift_rng = round_drift_rng(self.cfg.seed, rnd)
         n_context_changes = sum(drift_user(u, drift_rng) for u in users)
         n_hw_changes = sum(drift_device(s, drift_rng) for s in specs)
         self.last_drift = (n_context_changes, n_hw_changes)
 
-        # ---- multi-client quantization planning (profiling pipeline):
+    def _plan(self, users, specs):
+        # multi-client quantization planning (profiling pipeline):
         # cohort-batched — one RAG engine query per store for the whole
         # round instead of a per-client scan (DESIGN.md §10)
         decisions = plan_round(self.planner.plan_cohort(users, specs))
         bits = {d.user_id: d.bits for d in decisions}
+        return decisions, bits
 
-        # ---- local training at the planned precision (stragglers drop out).
-        # The round key is fixed before the client loop so clients can
-        # quantize + bit-pack their uplinks at the edge with the round's
-        # shared dither stream (ota.derive_sr_seed); the server only ever
-        # sees PackedRow wire rows, never the f32 (K, M) matrix.
-        round_key = jax.random.key(self.cfg.seed * 131 + rnd)
-        sr_seed = ota.derive_sr_seed(round_key)
+    def _train_cohort(self, decisions, ids: List[int], rnd: int, sr_seed):
+        """Local training at the planned precision (stragglers drop out).
+
+        Returns (deltas, weights, losses, active_ids) with ``deltas[j]``
+        packed for uplink row j — the cohort order both round loops fold
+        in.
+        """
         deltas, weights, losses, active_ids = [], [], [], []
-        drop_rng = np.random.RandomState(self.cfg.seed * 1237 + rnd)
+        drop_rng = round_rng(self.cfg.seed, rnd)
         for d, i in zip(decisions, ids):
-            if self.cfg.dropout_prob and \
-                    drop_rng.rand() < self.cfg.dropout_prob:
+            if self.cfg.dropout_prob and drop_rng.rand() < self.cfg.dropout_prob:
                 continue  # straggler: never reports this round
             delta, m = self.clients[i].local_update(
-                self.params, d.bits,
+                self.params,
+                d.bits,
                 local_steps=self.cfg.local_steps,
                 local_batch=self.cfg.local_batch,
-                lr=self.cfg.lr, seed=self.cfg.seed * 97 + rnd,
-                fedprox_mu=self.cfg.fedprox_mu, layout=self.layout,
-                sr_seed=sr_seed, uplink_row=len(deltas),
-                quant_block=self.cfg.quant_block)
+                lr=self.cfg.lr,
+                seed=self.cfg.seed * 97 + rnd,
+                fedprox_mu=self.cfg.fedprox_mu,
+                layout=self.layout,
+                sr_seed=sr_seed,
+                uplink_row=len(deltas),
+                quant_block=self.cfg.quant_block,
+            )
             deltas.append(delta)
             # FedAvg weight = samples x estimated contribution C_q (the
             # strategy's lever: class-equal upweights minority-rich
@@ -133,6 +184,50 @@ class FLServer:
             weights.append(m["n_samples"] * contrib)
             losses.append(m["loss_last"])
             active_ids.append(i)
+        return deltas, weights, losses, active_ids
+
+    def _apply_update(self, agg: Pytree) -> None:
+        # server momentum (FedAvgM) on the aggregated update
+        if self.cfg.server_momentum > 0.0:
+            if not hasattr(self, "_velocity"):
+                self._velocity = jax.tree.map(
+                    lambda u: jnp.zeros_like(u, jnp.float32), agg
+                )
+            self._velocity = jax.tree.map(
+                lambda v, u: self.cfg.server_momentum * v + u, self._velocity, agg
+            )
+            agg = self._velocity
+        self.params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), self.params, agg
+        )
+
+    def _observe_feedback(self, decisions, users, specs):
+        # feedback: realised satisfaction -> RAG databases
+        sats, energies = [], []
+        for d, u, s in zip(decisions, users, specs):
+            sat = satisfaction_score(u, s, d.bits)
+            perf = true_performance(u, s, d.bits)
+            self.planner.observe_feedback(u, s, d.bits, sat, perf)
+            sats.append(sat)
+            energies.append(perf["energy"])
+        return sats, energies
+
+    def run_round(self, rnd: int) -> RoundLog:
+        ids = self.select(rnd)
+        users = [self.users[i] for i in ids]
+        specs = [self.fleet[i] for i in ids]
+        self._apply_drift(rnd, users, specs)
+        decisions, bits = self._plan(users, specs)
+
+        # The round key is fixed before the client loop so clients can
+        # quantize + bit-pack their uplinks at the edge with the round's
+        # shared dither stream (ota.derive_sr_seed); the server only ever
+        # sees PackedRow wire rows, never the f32 (K, M) matrix.
+        round_key = jax.random.key(self.cfg.seed * 131 + rnd)
+        sr_seed = ota.derive_sr_seed(round_key)
+        deltas, weights, losses, active_ids = self._train_cohort(
+            decisions, ids, rnd, sr_seed
+        )
         if not deltas:  # everyone dropped: skip the aggregation
             log = RoundLog(rnd, bits, 0.0, 0.0, 0, float("nan"))
             self.round_logs.append(log)
@@ -142,34 +237,20 @@ class FLServer:
         # bit-packed wire rows go straight into the fused dequant +
         # superpose data plane (grouped per storage class, DESIGN.md §5)
         agg, info = ota.ota_aggregate_packed(
-            round_key, deltas,
+            round_key,
+            deltas,
             [bits[self.users[i].user_id] for i in active_ids],
-            weights, self.layout, ota.OTAConfig(snr_db=self.cfg.snr_db))
+            weights,
+            self.layout,
+            ota.OTAConfig(snr_db=self.cfg.snr_db),
+        )
         self.last_uplink_bytes = info["uplink_bytes"]
-        # server momentum (FedAvgM) on the aggregated update
-        if self.cfg.server_momentum > 0.0:
-            if not hasattr(self, "_velocity"):
-                self._velocity = jax.tree.map(
-                    lambda u: jnp.zeros_like(u, jnp.float32), agg)
-            self._velocity = jax.tree.map(
-                lambda v, u: self.cfg.server_momentum * v + u,
-                self._velocity, agg)
-            agg = self._velocity
-        self.params = jax.tree.map(
-            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
-            self.params, agg)
-
-        # ---- feedback: realised satisfaction -> RAG databases
-        sats, energies = [], []
-        for d, u, s in zip(decisions, users, specs):
-            sat = satisfaction_score(u, s, d.bits)
-            perf = true_performance(u, s, d.bits)
-            self.planner.observe_feedback(u, s, d.bits, sat, perf)
-            sats.append(sat)
-            energies.append(perf["energy"])
+        self._apply_update(agg)
+        sats, energies = self._observe_feedback(decisions, users, specs)
 
         log = RoundLog(
-            round=rnd, bits=bits,
+            round=rnd,
+            bits=bits,
             mean_satisfaction=float(np.mean(sats)),
             mean_energy=float(np.mean(energies)),
             n_participating=info["n_participating"],
@@ -182,15 +263,21 @@ class FLServer:
         for r in range(n_rounds or self.cfg.n_rounds):
             log = self.run_round(r)
             if verbose:
-                print(f"round {r:3d} loss={log.train_loss:.3f} "
-                      f"sat={log.mean_satisfaction:.3f} "
-                      f"energy={log.mean_energy:.3f} "
-                      f"clients={log.n_participating}")
+                print(
+                    f"round {r:3d} loss={log.train_loss:.3f} "
+                    f"sat={log.mean_satisfaction:.3f} "
+                    f"energy={log.mean_energy:.3f} "
+                    f"clients={log.n_participating}"
+                )
         return self.round_logs
 
     # ---- evaluation (word/char accuracy + CTC loss per category, Fig. 4)
-    def evaluate(self, eval_set: Optional[List[Utterance]] = None,
-                 batch: int = 24, with_loss: bool = False) -> Dict[str, float]:
+    def evaluate(
+        self,
+        eval_set: Optional[List[Utterance]] = None,
+        batch: int = 24,
+        with_loss: bool = False,
+    ) -> Dict[str, float]:
         eval_set = eval_set or make_eval_set(seed=self.cfg.seed + 999)
         correct: Dict[str, int] = {}
         total: Dict[str, int] = {}
@@ -204,21 +291,26 @@ class FLServer:
             if len(chunk) < batch:  # keep shapes static for the jit cache
                 chunk = list(chunk) + [chunk[-1]] * (batch - len(chunk))
             b = batchify(chunk, max_frames=320, max_labels=40)
-            ids = ds2_greedy_decode(self.model_params_fn(),
-                                    jnp.asarray(b["frames"]), self.arch)
+            ids = ds2_greedy_decode(
+                self.model_params_fn(), jnp.asarray(b["frames"]), self.arch
+            )
             ids = np.asarray(ids)
             if with_loss:
                 # per-utterance CTC loss (the accuracy metric is blind
                 # during CTC's early blank-collapse phase; loss is not)
-                lp = ds2_logits(self.model_params_fn(),
-                                jnp.asarray(b["frames"]), self.arch)
-                in_len = jnp.minimum(jnp.asarray(b["frame_len"]) // 4,
-                                     lp.shape[1])
+                lp = ds2_logits(
+                    self.model_params_fn(), jnp.asarray(b["frames"]), self.arch
+                )
+                in_len = jnp.minimum(jnp.asarray(b["frame_len"]) // 4, lp.shape[1])
                 for j, u in enumerate(chunk):
-                    lj = float(ctc_loss(
-                        lp[j : j + 1], jnp.asarray(b["labels"][j : j + 1]),
-                        in_len[j : j + 1],
-                        jnp.asarray(b["label_len"][j : j + 1])))
+                    lj = float(
+                        ctc_loss(
+                            lp[j : j + 1],
+                            jnp.asarray(b["labels"][j : j + 1]),
+                            in_len[j : j + 1],
+                            jnp.asarray(b["label_len"][j : j + 1]),
+                        )
+                    )
                     loss_sum[u.category] = loss_sum.get(u.category, 0.0) + lj
                     loss_n[u.category] = loss_n.get(u.category, 0) + 1
             for j, u in enumerate(chunk):
@@ -238,3 +330,213 @@ class FLServer:
 
     def model_params_fn(self):
         return self.params
+
+
+# ---------------------------------------------------------------------------
+# streaming rounds: event-driven buffered aggregation (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """One round's arrival plan: who folds when (``plan_stream``).
+
+    ``on_time``/``late``/``lost`` partition the uplink-row indices;
+    ``staleness`` is aligned with ``late``. ``t_trigger`` is when the
+    aggregation fires (cohort-fill or deadline, whichever first);
+    ``t_close`` is when the round actually ends — the trigger, or the
+    last counted late arrival inside the grace window.
+    """
+
+    on_time: Tuple[int, ...]
+    late: Tuple[int, ...]
+    lost: Tuple[int, ...]
+    staleness: Tuple[float, ...]
+    t_trigger: float
+    t_close: float
+
+    @property
+    def counted(self) -> Tuple[int, ...]:
+        """All folded row indices, in cohort (uplink-row) order."""
+        return tuple(sorted(self.on_time + self.late))
+
+
+def plan_stream(
+    times: Sequence[float],
+    *,
+    fill: int,
+    deadline: Optional[float] = None,
+    grace: float = 0.0,
+    gamma: float = 0.5,
+) -> StreamPlan:
+    """Plan one buffered round from simulated arrival times.
+
+    ``times[j]`` is uplink row j's arrival (seconds; ``inf`` = never
+    reports). The aggregation fires at the earlier of the ``fill``-th
+    arrival (cohort-fill) and ``deadline``; if neither ever happens
+    (fill target unreachable, no deadline) it degenerates to the
+    synchronous barrier and fires at the last finite arrival. Rows
+    landing within ``grace`` seconds after the trigger fold in late with
+    the ``core.ota.staleness_weights`` discount ``gamma ** (lag /
+    grace)``; later (or never-arriving) rows are lost.
+    """
+    t = [float(x) for x in times]
+    finite = sorted(x for x in t if math.isfinite(x))
+    t_fill = finite[fill - 1] if 0 < fill <= len(finite) else math.inf
+    t_trigger = t_fill if deadline is None else min(t_fill, float(deadline))
+    if not math.isfinite(t_trigger):
+        t_trigger = finite[-1] if finite else 0.0
+    g = max(float(grace), 1e-9)
+    on_time, late, lost, stale = [], [], [], []
+    for j, x in enumerate(t):
+        if x <= t_trigger:
+            on_time.append(j)
+        elif x <= t_trigger + grace:
+            late.append(j)
+            stale.append(min(1.0, max(min(gamma, 1.0), gamma ** ((x - t_trigger) / g))))
+        else:
+            lost.append(j)
+    t_close = max([t_trigger] + [t[j] for j in late])
+    return StreamPlan(
+        tuple(on_time), tuple(late), tuple(lost), tuple(stale), t_trigger, t_close
+    )
+
+
+@dataclasses.dataclass
+class StreamRoundLog(RoundLog):
+    sim_seconds: float = 0.0  # simulated wall-clock of the round
+    n_on_time: int = 0
+    n_late: int = 0
+    n_lost: int = 0
+
+
+class StreamingFLServer(FLServer):
+    """Event-driven buffered round loop (FedBuff-style, DESIGN.md §11).
+
+    Same select/drift/plan/train stages as ``FLServer`` (identical seeded
+    draws), but instead of the synchronous barrier every uplink gets a
+    simulated arrival time (``LatencyModel``) and the round is an event
+    queue: aggregation triggers on cohort-fill (``fill_fraction``) or
+    ``deadline_s``, rows inside ``grace_s`` after the trigger fold in
+    with the ``staleness_gamma`` discount, and everything folds into one
+    persistent ``ota.OtaAccumulator``. The channel draw + weight
+    renormalisation run once, at trigger time, over the full counted
+    arrival set in cohort order — so with the defaults (full fill, no
+    deadline, no latency dropouts) the round is bit-identical to
+    ``FLServer.run_round``: the synchronous path is the oracle.
+    """
+
+    def __init__(
+        self,
+        fl_cfg: FLConfig,
+        arch: Optional[ArchConfig] = None,
+        *,
+        shard_size: int = 24,
+        fill_fraction: float = 1.0,
+        deadline_s: Optional[float] = None,
+        grace_s: float = 0.0,
+        staleness_gamma: float = 0.5,
+        latency: Optional[LatencyModel] = None,
+    ):
+        super().__init__(fl_cfg, arch, shard_size=shard_size)
+        self.fill_fraction = fill_fraction
+        self.deadline_s = deadline_s
+        self.grace_s = grace_s
+        self.staleness_gamma = staleness_gamma
+        self.latency = latency if latency is not None else LatencyModel()
+
+    def _sample_arrivals(self, deltas, active_ids: List[int], rnd: int) -> List[float]:
+        """Simulated arrival time per uplink row (inf = never reports)."""
+        lat_rng = round_rng(self.cfg.seed, rnd, salt=4099)
+        times = []
+        for r, i in zip(deltas, active_ids):
+            t = self.latency.sample(self.fleet[i], lat_rng, uplink_bytes=r.wire_nbytes)
+            if self.latency.dropped(self.fleet[i], lat_rng):
+                t = math.inf
+            times.append(t)
+        return times
+
+    def run_round(self, rnd: int) -> StreamRoundLog:
+        ids = self.select(rnd)
+        users = [self.users[i] for i in ids]
+        specs = [self.fleet[i] for i in ids]
+        self._apply_drift(rnd, users, specs)
+        decisions, bits = self._plan(users, specs)
+
+        round_key = jax.random.key(self.cfg.seed * 131 + rnd)
+        sr_seed = ota.derive_sr_seed(round_key)
+        deltas, weights, losses, active_ids = self._train_cohort(
+            decisions, ids, rnd, sr_seed
+        )
+        if not deltas:  # everyone dropped in training: skip aggregation
+            log = StreamRoundLog(rnd, bits, 0.0, 0.0, 0, float("nan"))
+            self.round_logs.append(log)
+            return log
+
+        # ---- arrival simulation + round plan (trigger/late/lost)
+        times = self._sample_arrivals(deltas, active_ids, rnd)
+        n = len(deltas)
+        fill = (
+            n
+            if self.fill_fraction >= 1.0
+            else max(1, math.ceil(self.fill_fraction * n))
+        )
+        plan = plan_stream(
+            times,
+            fill=fill,
+            deadline=self.deadline_s,
+            grace=self.grace_s,
+            gamma=self.staleness_gamma,
+        )
+        self.last_times, self.last_plan = times, plan  # introspection
+        counted = list(plan.counted)
+        if not counted:  # every uplink lost in the air: skip aggregation
+            log = StreamRoundLog(
+                rnd, bits, 0.0, 0.0, 0, float("nan"), sim_seconds=plan.t_close, n_lost=n
+            )
+            self.round_logs.append(log)
+            return log
+
+        # ---- channel + weight renormalisation over the counted set, in
+        # cohort order, at trigger time (one draw per round — the same
+        # key split as the synchronous path, ota.round_channel)
+        ocfg = ota.OTAConfig(snr_db=self.cfg.snr_db)
+        w_counted = jnp.asarray([weights[j] for j in counted], jnp.float32)
+        habs, participate, w = ota.round_channel(round_key, w_counted, cfg=ocfg)
+
+        # ---- fold arrivals into the persistent accumulator: the on-time
+        # wave at the trigger, then the staleness-discounted late wave
+        pos = {j: p for p, j in enumerate(counted)}
+        acc = ota.OtaAccumulator(self.layout, ocfg)
+        if plan.late:
+            stale = dict(zip(plan.late, plan.staleness))
+            on_sorted, late_sorted = sorted(plan.on_time), sorted(plan.late)
+            w_on = w[jnp.asarray([pos[j] for j in on_sorted], jnp.int32)]
+            w_late = w[jnp.asarray([pos[j] for j in late_sorted], jnp.int32)]
+            acc.fold([deltas[j] for j in on_sorted], w_on)
+            acc.fold(
+                [deltas[j] for j in late_sorted],
+                w_late,
+                staleness=[stale[j] for j in late_sorted],
+            )
+        else:  # single wave: identical fold to the synchronous barrier
+            acc.fold([deltas[j] for j in counted], w)
+        agg, info = acc.finalize(round_key)
+        self.last_uplink_bytes = info["uplink_bytes"]
+        self._apply_update(agg)
+        sats, energies = self._observe_feedback(decisions, users, specs)
+
+        log = StreamRoundLog(
+            round=rnd,
+            bits=bits,
+            mean_satisfaction=float(np.mean(sats)),
+            mean_energy=float(np.mean(energies)),
+            n_participating=int(jax.device_get(participate).sum()),
+            train_loss=float(np.mean([losses[j] for j in counted])),
+            sim_seconds=plan.t_close,
+            n_on_time=len(plan.on_time),
+            n_late=len(plan.late),
+            n_lost=len(plan.lost),
+        )
+        self.round_logs.append(log)
+        return log

@@ -154,6 +154,33 @@ def topk_cosine(qm: jnp.ndarray, recs: jnp.ndarray,
     return s[:Q, :k], i[:Q, :k]
 
 
+@functools.partial(jax.jit, static_argnames=("qblock", "packed4"))
+def ota_fold_packed(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
+                    w: jnp.ndarray, *, qblock: int = 0,
+                    packed4: bool = False):
+    """Fold one packed micro-batch into the persistent superposition state.
+
+    The streaming-round primitive (DESIGN.md §11): acc is the running
+    (M,) f32 accumulator (start from zeros or a prior
+    ``ota_dequant_superpose`` partial), q/scale/w one micro-batch of
+    same-storage-class client rows exactly as in
+    ``ota_dequant_superpose``. Returns acc + the batch's weighted
+    dequantized superposition, so a round becomes
+    fold(fold(fold(state, batch0), batch1), ...) instead of one (K, M)
+    barrier. Oracle: ``ref.ota_fold_ref`` (bit-equal; the jnp path is
+    the CPU perf path, as with the other OTA kernels).
+    """
+    interpret = jax.devices()[0].platform != "tpu"
+    bc = _otaf.BLOCK_COLS // 2 if packed4 else _otaf.BLOCK_COLS
+    M = 2 * q.shape[1] if packed4 else q.shape[1]
+    qp, _ = _pad_to(q, bc, axis=1)
+    Mp = 2 * qp.shape[1] if packed4 else qp.shape[1]
+    accp, _ = _pad_to(acc, Mp)
+    out = _otaf.ota_fold_2d(accp, qp, scale, w, qblock=qblock,
+                            packed4=packed4, interpret=interpret)
+    return out[:M]
+
+
 @jax.jit
 def qmatmul(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     """x (M, K) @ dequant(w_q (K, N) int8; per-channel scale (N,))."""

@@ -184,6 +184,77 @@ def _dq_superpose_int4_kernel(scale_ref, w_ref, p_ref, o_ref, *, qblock=0,
                          axis=0).reshape(o_ref.shape)
 
 
+def _fold_superpose_kernel(scale_ref, w_ref, q_ref, acc_ref, o_ref, *,
+                           qblock=0, aligned=False):
+    """Streaming fold: out = acc + sum_k w_k s_k q_k (DESIGN.md §11).
+
+    The persistent-accumulator variant of ``_dq_superpose_kernel``: the
+    running (M,) superposition streams through VMEM alongside the
+    micro-batch's symbol tiles, and each grid step writes the folded
+    tile. Per-column math is identical to the barrier kernel plus one
+    elementwise add, so fold(zeros, batch) == superpose(batch) and
+    fold(fold(state, b0), b1) is exactly the left-associated group sum
+    the synchronous path computes (core/ota._fold_groups).
+    """
+    i = pl.program_id(0)
+    K, B = q_ref.shape
+    scale = _tile_scale_cols(scale_ref, i, K, B, qblock, aligned)
+    dq = q_ref[...].astype(jnp.float32) * scale
+    part = jnp.sum(dq * w_ref[...].astype(jnp.float32), axis=0)
+    o_ref[...] = acc_ref[...] + part.reshape(o_ref.shape)
+
+
+def _fold_superpose_int4_kernel(scale_ref, w_ref, p_ref, acc_ref, o_ref, *,
+                                qblock=0, aligned=False):
+    """int4 fold variant: in-VMEM nibble unpack, then fold into acc."""
+    i = pl.program_id(0)
+    q = _unpack_nibbles(p_ref[...])
+    K, B = q.shape
+    scale = _tile_scale_cols(scale_ref, i, K, B, qblock, aligned)
+    dq = q.astype(jnp.float32) * scale
+    part = jnp.sum(dq * w_ref[...].astype(jnp.float32), axis=0)
+    o_ref[...] = acc_ref[...] + part.reshape(o_ref.shape)
+
+
+def _packed_specs(q, scale, *, qblock, packed4):
+    """Shared scaffolding of the packed superpose/fold calls.
+
+    Returns (M, grid, in_specs, scales, w_spec_args...) — the grid, the
+    normalized (and, in the aligned case, padded) scale matrix, and the
+    BlockSpecs for (scale matrix, per-client column, symbol tile).
+
+    Scale streaming: when qblock divides the logical tile width (every
+    power-of-two block size <= BLOCK_COLS, incl. the 256 default), each
+    grid step owns a contiguous (K, BLOCK_COLS/qblock) scale slice — a
+    streamed BlockSpec, VMEM-safe at any M. The scale matrix is padded
+    with 1.0 to the grid's block count (lane padding symbols are exact
+    zeros, so the scale value multiplied there never shows). Unaligned
+    sizes keep the whole matrix resident + in-kernel gather.
+    """
+    K, cols = q.shape
+    bc = BLOCK_COLS // 2 if packed4 else BLOCK_COLS
+    assert cols % bc == 0, (cols, bc)
+    M = 2 * cols if packed4 else cols
+    scales = jnp.asarray(scale, jnp.float32)
+    if scales.ndim == 1:
+        scales = scales.reshape(K, 1)
+    n_blocks = scales.shape[1]
+    grid = (cols // bc,)
+    col = pl.BlockSpec((K, 1), lambda i: (0, 0))
+    tile = pl.BlockSpec((K, bc), lambda i: (0, i))
+    aligned = qblock > 0 and n_blocks > 1 and BLOCK_COLS % qblock == 0
+    if aligned:
+        bpt = BLOCK_COLS // qblock  # blocks per tile
+        need = grid[0] * bpt
+        if n_blocks < need:
+            scales = jnp.pad(scales, ((0, 0), (0, need - n_blocks)),
+                             constant_values=1.0)
+        smat = pl.BlockSpec((K, bpt), lambda i: (0, i))
+    else:
+        smat = pl.BlockSpec((K, n_blocks), lambda i: (0, 0))
+    return M, grid, aligned, scales, smat, col, tile
+
+
 def ota_packed_2d(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
                   qblock: int = 0, packed4: bool = False,
                   interpret: bool = False):
@@ -198,34 +269,9 @@ def ota_packed_2d(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
     caller combines groups and computes the AWGN power on the total
     (see core/ota.py).
     """
-    K, cols = q.shape
-    bc = BLOCK_COLS // 2 if packed4 else BLOCK_COLS
-    assert cols % bc == 0, (cols, bc)
-    M = 2 * cols if packed4 else cols
-    scales = jnp.asarray(scale, jnp.float32)
-    if scales.ndim == 1:
-        scales = scales.reshape(K, 1)
-    n_blocks = scales.shape[1]
-    grid = (cols // bc,)
-    col = pl.BlockSpec((K, 1), lambda i: (0, 0))
-    tile = pl.BlockSpec((K, bc), lambda i: (0, i))
-    # Scale streaming: when qblock divides the logical tile width (every
-    # power-of-two block size <= BLOCK_COLS, incl. the 256 default), each
-    # grid step owns a contiguous (K, BLOCK_COLS/qblock) scale slice — a
-    # streamed BlockSpec, VMEM-safe at any M. The scale matrix is padded
-    # with 1.0 to the grid's block count (lane padding symbols are exact
-    # zeros, so the scale value multiplied there never shows). Unaligned
-    # sizes keep the whole matrix resident + in-kernel gather.
-    aligned = qblock > 0 and n_blocks > 1 and BLOCK_COLS % qblock == 0
-    if aligned:
-        bpt = BLOCK_COLS // qblock  # blocks per tile
-        need = grid[0] * bpt
-        if n_blocks < need:
-            scales = jnp.pad(scales, ((0, 0), (0, need - n_blocks)),
-                             constant_values=1.0)
-        smat = pl.BlockSpec((K, bpt), lambda i: (0, i))
-    else:
-        smat = pl.BlockSpec((K, n_blocks), lambda i: (0, 0))
+    K = q.shape[0]
+    M, grid, aligned, scales, smat, col, tile = _packed_specs(
+        q, scale, qblock=qblock, packed4=packed4)
     body = _dq_superpose_int4_kernel if packed4 else _dq_superpose_kernel
     return pl.pallas_call(
         functools.partial(body, qblock=qblock, aligned=aligned),
@@ -237,6 +283,39 @@ def ota_packed_2d(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
     )(scales,
       w.reshape(K, 1).astype(jnp.float32),
       q)
+
+
+def ota_fold_2d(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
+                w: jnp.ndarray, *, qblock: int = 0, packed4: bool = False,
+                interpret: bool = False):
+    """Fold one packed micro-batch into a persistent (M,) accumulator.
+
+    Same contract as ``ota_packed_2d`` plus ``acc``: the running
+    superposition state ((M,) f32, M the logical symbol count). Returns
+    acc + the micro-batch's partial aggregate — the streaming-round
+    primitive (DESIGN.md §11): arrivals fold in batch by batch instead
+    of one (K, M) barrier, and HBM traffic per fold is one read of the
+    batch symbols + one read/write of the accumulator. Oracle:
+    ``ref.ota_fold_ref`` (bit-equal).
+    """
+    K = q.shape[0]
+    M, grid, aligned, scales, smat, col, tile = _packed_specs(
+        q, scale, qblock=qblock, packed4=packed4)
+    assert acc.shape == (M,), (acc.shape, M)
+    body = (_fold_superpose_int4_kernel if packed4
+            else _fold_superpose_kernel)
+    acc_spec = pl.BlockSpec((BLOCK_COLS,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(body, qblock=qblock, aligned=aligned),
+        grid=grid,
+        in_specs=[smat, col, tile, acc_spec],
+        out_specs=pl.BlockSpec((BLOCK_COLS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((M,), jnp.float32),
+        interpret=interpret,
+    )(scales,
+      w.reshape(K, 1).astype(jnp.float32),
+      q,
+      acc.astype(jnp.float32))
 
 
 def ota_fused_2d(x: jnp.ndarray, scale: jnp.ndarray, qmax: jnp.ndarray,

@@ -91,6 +91,22 @@ def ota_packed_ref(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
     return jnp.sum(dq * w.reshape(-1, 1).astype(jnp.float32), axis=0)
 
 
+def ota_fold_ref(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
+                 w: jnp.ndarray, *, qblock: int = 0,
+                 packed4: bool = False) -> jnp.ndarray:
+    """Oracle for the streaming fold kernel (``ota_fused.ota_fold_2d``).
+
+    acc: the running (M,) f32 superposition state; remaining args as in
+    ``ota_packed_ref``. Returns acc + sum_k w_k * scale_k[block] * q_k —
+    the per-column math of the barrier oracle plus one elementwise add,
+    so kernel and oracle are bit-equal and fold(zeros, batch) equals
+    ``ota_packed_ref(batch)`` (the persistent-accumulator contract,
+    DESIGN.md §11).
+    """
+    return acc.astype(jnp.float32) + ota_packed_ref(
+        q, scale, w, qblock=qblock, packed4=packed4)
+
+
 def ota_aggregate_ref(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
                       noise_std: jnp.ndarray) -> jnp.ndarray:
     """Superpose K client streams: sum_k w_k x_k + noise_std * noise.

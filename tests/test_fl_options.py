@@ -30,6 +30,7 @@ def test_dropout_all_skips_aggregation_safely():
     before = jax.tree.leaves(srv.params)[0].copy()
     log = srv.run_round(0)
     assert log.n_participating == 0
+    assert np.isnan(log.train_loss)  # NaN loss marks the skipped round
     after = jax.tree.leaves(srv.params)[0]
     np.testing.assert_array_equal(before, after)  # params untouched
 
