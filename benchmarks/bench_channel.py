@@ -1,0 +1,225 @@
+"""Physical OTA channel sweep: SNR x truncation threshold (DESIGN.md §12).
+
+The fading channel (``core/channel.py``) turns two radio knobs into
+aggregation-quality levers: the receiver SNR sets the AWGN floor, and
+the truncation threshold trades participation (clients in a deep fade
+are excluded) against misalignment (survivors whose power budget can't
+fully invert arrive scaled by g_k < 1). This bench sweeps both over a
+mixed-precision packed cohort and reports, per (snr_db, fade_threshold)
+cell:
+
+- participation rate (surviving clients / cohort) and mean misalignment
+  residual 1 - g_k over survivors;
+- aggregate error vs the ideal channel: relative MSE between the fading
+  aggregate (gains in the fused pass) and the same cohort aggregated at
+  unit gain with no noise.
+
+``--smoke`` is the CI mode (scripts/tier1.sh), asserting the PR's two
+acceptance bars:
+
+- **unit-channel bit-equality**: ``gains=ones`` == ``gains=None`` —
+  bitwise, barrier (``ota_aggregate_packed``) AND streaming
+  (``OtaAccumulator``) modes, jnp-oracle AND Pallas-kernel paths (the
+  legacy ``fade_threshold=0.0`` config so the coin-flip draw passes
+  everyone, making the two programs comparable);
+- **power control flattens the channel**: the post-inversion effective
+  gains' relative spread (std/mean over survivors) shrinks vs the
+  no-power-control baseline where every client transmits at the budget
+  cap and arrives scaled by its raw |h_k|.
+
+Usage: python benchmarks/bench_channel.py [--csv] [--smoke]
+Runnable standalone (self-locates ``src/``) or via scripts/tier1.sh.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+try:
+    import repro  # noqa: F401  (importability probe)
+except ImportError:  # standalone invocation: put <repo>/src on sys.path
+    sys.path.insert(
+        0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import channel as chan
+from repro.core import ota, packing
+
+K_DEFAULT = 16
+M_DEFAULT = 1 << 14
+POWER_BUDGET = 4.0  # sqrt(P) = 2: weak channels hit the cap -> misalignment
+
+SNR_SWEEP = [5.0, 10.0, 20.0]           # receiver SNR (dB)
+THRESH_SWEEP = [0.0, 0.05, 0.2, 0.5]    # |h|^2 truncation thresholds
+
+
+def _packed_cohort(K: int, M: int, seed: int = 0):
+    """Synthetic mixed-precision packed cohort + layout + round key."""
+    rng = np.random.RandomState(seed)
+    tree = {"w": jnp.asarray(rng.randn(M).astype(np.float32) * 0.01)}
+    layout = packing.make_layout(tree)
+    bits = [(4, 8, 8, 16, 32)[i % 5] for i in range(K)]
+    weights = [1.0 + (i % 3) for i in range(K)]
+    key = jax.random.key(seed + 11)
+    sr = ota.derive_sr_seed(key)
+    rows = []
+    for i, b in enumerate(bits):
+        up = {"w": jnp.asarray(rng.randn(M).astype(np.float32) * 0.01)}
+        rows.append(ota.quantize_uplink(packing.pack(up, layout), b, sr, i,
+                                        block=packing.QUANT_BLOCK))
+    return rows, weights, layout, key
+
+
+# ---------------------------------------------------------------------------
+# SNR x threshold sweep
+# ---------------------------------------------------------------------------
+
+
+def sweep_cell(snr_db: float, threshold: float, *, K: int = K_DEFAULT,
+               M: int = M_DEFAULT, seed: int = 0):
+    """One (snr, threshold) cell: participation, misalignment, rel-MSE."""
+    rows, weights, layout, key = _packed_cohort(K, M, seed=seed)
+    model = chan.ChannelModel(chan.ChannelConfig(
+        fade_threshold=threshold, power_budget=POWER_BUDGET))
+    state = model.sample(key, K)
+    gains = state.gains
+    cfg = ota.OTAConfig(snr_db=snr_db)
+    agg, info = ota.ota_aggregate_packed(key, rows, None, weights, layout,
+                                         cfg, gains=gains, use_kernel=False)
+    # ideal reference: unit gains, effectively-noiseless receiver
+    ideal, _ = ota.ota_aggregate_packed(
+        key, rows, None, weights, layout, ota.OTAConfig(snr_db=200.0),
+        gains=jnp.ones((K,), jnp.float32), use_kernel=False)
+    err = sum(float(jnp.sum((a - b) ** 2)) for a, b in
+              zip(jax.tree.leaves(agg), jax.tree.leaves(ideal)))
+    ref = sum(float(jnp.sum(b ** 2)) for b in jax.tree.leaves(ideal))
+    g = np.asarray(jax.device_get(gains))
+    surv = g > 0
+    mis = float((1.0 - g[surv]).mean()) if surv.any() else 1.0
+    return {
+        "snr_db": snr_db,
+        "fade_threshold": threshold,
+        "participation": float(surv.mean()),
+        "mean_misalignment": mis,
+        "rel_mse_vs_ideal": err / max(ref, 1e-30),
+    }
+
+
+# ---------------------------------------------------------------------------
+# smoke bars
+# ---------------------------------------------------------------------------
+
+
+def check_unit_channel_bit_equality(K: int = 6, M: int = 1 << 14) -> None:
+    """gains=ones == gains=None bitwise — barrier and streaming modes,
+    oracle and kernel paths.
+
+    Uses ``fade_threshold=0.0`` so the legacy path's coin-flip passes
+    every client (|h|^2 >= 0 always) — the two programs then compute the
+    same weighted superposition and must agree to the bit.
+    """
+    rows, weights, layout, key = _packed_cohort(K, M)
+    cfg = ota.OTAConfig(snr_db=20.0, fade_threshold=0.0)
+    ones = jnp.ones((K,), jnp.float32)
+    for use_kernel in (False, True):
+        legacy, _ = ota.ota_aggregate_packed(key, rows, None, weights,
+                                             layout, cfg,
+                                             use_kernel=use_kernel)
+        unit, _ = ota.ota_aggregate_packed(key, rows, None, weights, layout,
+                                           cfg, gains=ones,
+                                           use_kernel=use_kernel)
+        for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(unit)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # streaming: the same contract through the persistent accumulator
+        _, _, w = ota.round_channel(key, jnp.asarray(weights, jnp.float32),
+                                    cfg=cfg)
+        acc0 = ota.OtaAccumulator(layout, cfg, use_kernel=use_kernel)
+        acc1 = ota.OtaAccumulator(layout, cfg, use_kernel=use_kernel)
+        got0, _ = acc0.fold(rows, w).finalize(key)
+        got1, _ = acc1.fold(rows, w, gains=ones).finalize(key)
+        for a, b in zip(jax.tree.leaves(got0), jax.tree.leaves(got1)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(got0)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def check_power_control_flattens_gains(n: int = 256, seed: int = 7):
+    """Truncated inversion must shrink the survivors' gain spread vs the
+    no-power-control baseline (everyone at the cap, raw |h| scaling).
+    Returns (controlled spread, uncontrolled spread), asserting shrink.
+    """
+    model = chan.ChannelModel(chan.ChannelConfig(
+        fade_threshold=0.05, power_budget=POWER_BUDGET))
+    state = model.sample(jax.random.key(seed), n)
+    g = np.asarray(jax.device_get(state.gains))
+    unc = np.asarray(jax.device_get(model.uncontrolled_gains(state)))
+    surv = g > 0
+    rel = lambda x: float(x.std() / max(x.mean(), 1e-12))  # noqa: E731
+    inv_spread, unc_spread = rel(g[surv]), rel(unc[surv])
+    assert inv_spread < unc_spread, (inv_spread, unc_spread)
+    return inv_spread, unc_spread
+
+
+def smoke() -> int:
+    """CI mode: bit-equality + variance-shrink acceptance bars."""
+    check_unit_channel_bit_equality()
+    inv, unc = check_power_control_flattens_gains()
+    print(f"smoke OK: unit channel (gains=ones) == legacy gains=None "
+          f"bit-equal, barrier + streaming, oracle + kernel; inversion "
+          f"gain spread {inv:.3f} < uncontrolled {unc:.3f}")
+    return 0
+
+
+def json_report() -> dict:
+    """Machine-readable smoke-scale numbers (benchmarks/run.py --json)."""
+    inv, unc = check_power_control_flattens_gains()
+    cells = [sweep_cell(snr, th) for snr in (10.0, 20.0)
+             for th in (0.05, 0.2)]
+    return {
+        "K": K_DEFAULT, "M": M_DEFAULT, "power_budget": POWER_BUDGET,
+        "inversion_gain_spread": inv,
+        "uncontrolled_gain_spread": unc,
+        "cells": cells,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: bit-equality + variance-shrink asserts")
+    args = ap.parse_args()
+
+    if args.smoke:
+        raise SystemExit(smoke())
+
+    check_unit_channel_bit_equality()
+    print("unit channel == legacy path: bit-equal (barrier + streaming)")
+    inv, unc = check_power_control_flattens_gains()
+    print(f"survivor gain spread: inversion {inv:.3f} vs "
+          f"no-power-control {unc:.3f}")
+    if args.csv:
+        print("snr_db,fade_threshold,participation,mean_misalignment,"
+              "rel_mse_vs_ideal")
+    else:
+        print(f"{'snr':>5} {'thresh':>7} {'partic':>7} {'misalign':>9} "
+              f"{'rel_mse':>10}")
+    for snr in SNR_SWEEP:
+        for th in THRESH_SWEEP:
+            c = sweep_cell(snr, th)
+            if args.csv:
+                print(f"{snr},{th},{c['participation']:.3f},"
+                      f"{c['mean_misalignment']:.4f},"
+                      f"{c['rel_mse_vs_ideal']:.5f}")
+            else:
+                print(f"{snr:>5.1f} {th:>7.2f} {c['participation']:>7.2f} "
+                      f"{c['mean_misalignment']:>9.4f} "
+                      f"{c['rel_mse_vs_ideal']:>10.5f}")
+
+
+if __name__ == "__main__":
+    main()

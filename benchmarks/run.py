@@ -7,9 +7,9 @@ assignment's roofline table. Prints ``name,us_per_call,derived`` CSV.
 
 ``--json`` skips the CSV sweeps and instead writes one
 ``BENCH_<name>.json`` per data-plane bench (aggregation, retrieval,
-streaming) into the working directory — smoke-scale timings plus the
-acceptance-bar values each bench's ``--smoke`` mode asserts, for
-machine consumption (dashboards, regression diffs).
+streaming, channel) into the working directory — smoke-scale timings
+plus the acceptance-bar values each bench's ``--smoke`` mode asserts,
+for machine consumption (dashboards, regression diffs).
 """
 import sys
 from pathlib import Path
@@ -26,12 +26,13 @@ import json
 
 
 def _write_json() -> None:
-    from benchmarks import (bench_aggregation, bench_retrieval,
-                            bench_streaming)
+    from benchmarks import (bench_aggregation, bench_channel,
+                            bench_retrieval, bench_streaming)
 
     for name, mod in [("aggregation", bench_aggregation),
                       ("retrieval", bench_retrieval),
-                      ("streaming", bench_streaming)]:
+                      ("streaming", bench_streaming),
+                      ("channel", bench_channel)]:
         path = f"BENCH_{name}.json"
         with open(path, "w") as f:
             json.dump(mod.json_report(), f, indent=2, sort_keys=True)

@@ -25,6 +25,10 @@ def main() -> None:
                     choices=["rag", "unified", "rag_energy"])
     ap.add_argument("--strategy", default="fedavg",
                     choices=["fedavg", "class_equal", "majority_centric"])
+    ap.add_argument("--channel", default="ideal", choices=["ideal", "fading"],
+                    help="physical channel model (DESIGN.md §12)")
+    ap.add_argument("--fade-threshold", type=float, default=0.1,
+                    help="|h|^2 truncation threshold (fading channel)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -32,8 +36,10 @@ def main() -> None:
         n_clients=args.clients, clients_per_round=args.per_round,
         n_rounds=args.rounds, local_steps=args.local_steps, local_batch=6,
         lr=2e-3, planner=args.planner, strategy=args.strategy,
+        channel_model=args.channel, fade_threshold=args.fade_threshold,
         seed=args.seed)
     print(f"planner={args.planner} strategy={args.strategy} "
+          f"channel={args.channel} "
           f"clients={args.clients} rounds={args.rounds}")
     srv = FLServer(cfg, shard_size=16)
     t0 = time.time()

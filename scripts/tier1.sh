@@ -1,10 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verify (see ROADMAP.md): docs consistency, packed-uplink bench
-# smoke, retrieval-engine bench smoke, streaming-aggregation bench smoke
-# (all hard-asserted acceptance checks), then the whole suite, stop on
-# first failure. Run from the repo root:
+# smoke, retrieval-engine bench smoke, streaming-aggregation bench smoke,
+# physical-channel bench smoke (all hard-asserted acceptance checks),
+# then the whole suite, stop on first failure. Run from the repo root:
 #   bash scripts/tier1.sh [extra pytest args...]
-# CI (.github/workflows/ci.yml) runs these same five commands. The
+# CI (.github/workflows/ci.yml) runs these same six commands. The
 # PYTHONPATH export is belt-and-braces: pytest (conftest.py) and the
 # benches (in-file bootstrap) self-locate src/ when invoked standalone.
 set -euo pipefail
@@ -14,4 +14,5 @@ python scripts/check_docs.py
 python benchmarks/bench_aggregation.py --smoke
 python benchmarks/bench_retrieval.py --smoke
 python benchmarks/bench_streaming.py --smoke
+python benchmarks/bench_channel.py --smoke
 python -m pytest -x -q "$@"

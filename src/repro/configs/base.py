@@ -237,6 +237,14 @@ class FLConfig:
     # per-row wire format).
     quant_block: int = QUANT_BLOCK
     seed: int = 0
+    # physical OTA channel (core/channel.py, DESIGN.md §12). "ideal" is
+    # the legacy path (participation coin-flip + AWGN only, bit-identical
+    # to pre-channel runs); "fading" draws per-client Rayleigh gains with
+    # truncated channel inversion under the transmit power budget.
+    channel_model: str = "ideal"  # ideal | fading
+    fade_threshold: float = 0.1   # |h|^2 truncation threshold
+    tx_power_budget: float = 100.0  # per-client max transmit power P
+    pathloss_spread_db: float = 0.0  # log-normal shadowing std (dB)
     # robustness options
     dropout_prob: float = 0.0   # straggler/device dropout per round
     fedprox_mu: float = 0.0     # proximal term pulling local weights to global

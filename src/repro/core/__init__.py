@@ -1,1 +1,1 @@
-from repro.core import ota, quant  # noqa: F401
+from repro.core import channel, ota, quant  # noqa: F401

@@ -1,0 +1,221 @@
+"""Physical OTA channel model: block fading, truncated channel inversion
+power control, and misalignment (DESIGN.md §12).
+
+The aggregation data plane (``core/ota.py``) historically modelled the
+"Over-the-Air" half of the system as one receiver AWGN term plus a
+participation coin-flip. This module adds the physical layer the source
+model (paper refs; "Over-the-Air Federated Learning from Heterogeneous
+Data", arXiv 2009.12787) actually derives:
+
+- **Block fading.** Per client k and round, a complex channel
+  coefficient h_k ~ CN(0, beta_k) — Rayleigh magnitude |h_k| with an
+  optional per-client log-normal shadowing/path-loss spread beta_k
+  (``pathloss_spread_db``). The draw comes from a *dedicated* stream
+  derived off the round key (``derive_channel_key``), disjoint from the
+  legacy channel/dither/noise splits, so enabling the model never
+  perturbs the AWGN or stochastic-rounding draws.
+- **Truncated channel inversion.** A client in a deep fade cannot
+  invert its channel within any finite power budget; clients with
+  |h_k|^2 < ``fade_threshold`` transmit at zero power and are excluded
+  from the round (and from the FedAvg weight renormalisation — see
+  ``combine_weights``). Survivors pre-scale their analog symbols by
+  rho / |h_k| (phase-corrected), so their signals superpose aligned at
+  the receiver.
+- **Power budget + misalignment.** The inversion amplitude is capped at
+  sqrt(``power_budget``): a surviving client whose channel is weak
+  transmits at the cap and arrives *mis-aligned*, with effective
+  receive gain g_k = |h_k| * a_k / rho = min(1, |h_k| sqrt(P) / rho)
+  < 1. The per-row gain vector g is what the fused aggregation pass
+  consumes (``kernels/ota_fused.ota_packed_2d`` with ``gains=``;
+  DESIGN.md §12) — g_k = 0 encodes truncation, g_k = 1 perfect
+  inversion, and 1 - g_k is the residual misalignment error.
+
+Everything is a pure function of (round key, config): the barrier and
+streaming round loops sample the same ``ChannelState`` for the same
+round, and a seeded run replays bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Stream tag for the channel fading draw. The legacy round draws are the
+# three ``jax.random.split(key, 3)`` children (channel coin-flip, SR
+# dither seed, AWGN); ``fold_in`` with this constant derives a fourth,
+# provably distinct stream (tests/test_channel.py pins the separation).
+_CHANNEL_STREAM = 0x0C4A17
+_TINY = 1e-12
+
+
+def derive_channel_key(key) -> jax.Array:
+    """The round's dedicated fading-draw key.
+
+    ``jax.random.fold_in`` of the round key with the channel stream tag:
+    disjoint by construction from the ``split(key, 3)`` children that
+    feed the legacy participation draw, the stochastic-rounding dither
+    seed (``ota.derive_sr_seed``), and the receiver AWGN — adding the
+    physical channel cannot collide with (or shift) any legacy stream.
+    """
+    return jax.random.fold_in(key, _CHANNEL_STREAM)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Physical-channel knobs (hashable: usable as a jit static arg).
+
+    fade_threshold: truncation threshold on the channel power |h_k|^2 —
+    below it the client transmits at zero power this round.
+    rho: target alignment amplitude at the receiver (the common analog
+    scale every surviving client inverts toward).
+    power_budget: per-client maximum transmit *power* P; the inversion
+    amplitude rho / |h_k| is capped at sqrt(P).
+    pathloss_spread_db: std (dB) of a per-client log-normal
+    shadowing/path-loss term multiplying the Rayleigh channel power;
+    0 disables it (i.i.d. unit-power Rayleigh).
+    """
+
+    fade_threshold: float = 0.1
+    rho: float = 1.0
+    power_budget: float = 100.0
+    pathloss_spread_db: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelState:
+    """One round's realised channel over a K-client cohort.
+
+    habs: (K,) fading magnitudes |h_k| (Rayleigh x shadowing).
+    gains: (K,) effective receive gain g_k in [0, 1] — 0 for truncated
+    clients, 1 under perfect inversion, in between when the power
+    budget binds. This is the per-row vector the fused pass consumes.
+    tx_amp: (K,) transmit amplitude a_k actually used (0 when
+    truncated; a_k^2 <= power_budget always).
+    """
+
+    habs: jnp.ndarray
+    gains: jnp.ndarray
+    tx_amp: jnp.ndarray
+
+    @property
+    def truncated(self) -> jnp.ndarray:
+        """(K,) bool: clients excluded by truncated channel inversion."""
+        return self.gains <= 0
+
+    @property
+    def n_truncated(self) -> int:
+        return int(jax.device_get(self.truncated).sum())
+
+    @property
+    def misalignment(self) -> jnp.ndarray:
+        """(K,) residual alignment error 1 - g_k over surviving clients
+        (0 for truncated clients — they contribute nothing, aligned or
+        not)."""
+        return jnp.where(self.truncated, 0.0, 1.0 - self.gains)
+
+    def snr_db(self, snr_db: float) -> jnp.ndarray:
+        """(K,) per-client effective receive SNR (dB): the configured
+        receiver SNR shifted by the realised channel power |h_k|^2 —
+        the profiling feature the planner sees (DESIGN.md §12)."""
+        h2 = jnp.maximum(self.habs**2, _TINY)
+        return jnp.float32(snr_db) + 10.0 * jnp.log10(h2)
+
+
+# Pytree registration: jitted samplers return a ChannelState directly.
+jax.tree_util.register_dataclass(
+    ChannelState, data_fields=["habs", "gains", "tx_amp"], meta_fields=[]
+)
+
+
+@functools.partial(jax.jit, static_argnames=("n_clients", "cfg"))
+def _sample_habs(key, *, n_clients: int, cfg: ChannelConfig) -> jnp.ndarray:
+    """Rayleigh |h| with optional log-normal shadowing, from the
+    dedicated channel stream of ``key``."""
+    kr, ki, ks = jax.random.split(derive_channel_key(key), 3)
+    hr = jax.random.normal(kr, (n_clients,)) * jnp.sqrt(0.5)
+    hi = jax.random.normal(ki, (n_clients,)) * jnp.sqrt(0.5)
+    h2 = hr**2 + hi**2
+    if cfg.pathloss_spread_db > 0.0:
+        shadow_db = jax.random.normal(ks, (n_clients,)) * cfg.pathloss_spread_db
+        h2 = h2 * 10.0 ** (shadow_db / 10.0)
+    return jnp.sqrt(h2)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def state_from_habs(habs: jnp.ndarray, *, cfg: ChannelConfig) -> ChannelState:
+    """Truncated channel inversion of realised magnitudes ``habs``.
+
+    Pure and draw-free — the deterministic half of ``ChannelModel.
+    sample``, exposed so tests can pin exact boundary cases (|h|^2 ==
+    threshold, budget exactly at the inversion point). Truncation uses
+    ``>=``: a client exactly at the threshold participates.
+    """
+    habs = jnp.asarray(habs, jnp.float32)
+    participate = habs**2 >= cfg.fade_threshold
+    inv = cfg.rho / jnp.maximum(habs, _TINY)
+    tx_amp = jnp.where(
+        participate, jnp.minimum(inv, jnp.sqrt(cfg.power_budget)), 0.0
+    )
+    gains = habs * tx_amp / cfg.rho
+    return ChannelState(habs=habs, gains=gains, tx_amp=tx_amp)
+
+
+@jax.jit
+def combine_weights(weights, gains) -> jnp.ndarray:
+    """FedAvg weight renormalisation over the *surviving* clients.
+
+    Truncated clients (g_k = 0) are excluded from the normaliser — the
+    round's aggregate is the weighted mean of the clients that actually
+    transmit, exactly as the legacy path excludes its coin-flip
+    non-participants (``ota.round_channel``; same 1e-12 guard, so an
+    all-truncated round yields all-zero weights, not NaN).
+    """
+    w = jnp.asarray(weights, jnp.float32) * (jnp.asarray(gains) > 0)
+    return w / jnp.maximum(jnp.sum(w), _TINY)
+
+
+class ChannelModel:
+    """Seeded per-round physical channel (module docstring; DESIGN.md §12).
+
+    Stateless between rounds: ``sample(round_key, K)`` is a pure
+    function, so the barrier server (sampling before local training to
+    plan around truncated clients) and the streaming server (folding
+    gains at trigger time) see the identical ``ChannelState`` for the
+    same round key.
+    """
+
+    def __init__(self, cfg: ChannelConfig = ChannelConfig()):
+        self.cfg = cfg
+
+    def sample(self, round_key, n_clients: int) -> ChannelState:
+        """Draw one round's fading + run truncated inversion."""
+        habs = _sample_habs(round_key, n_clients=n_clients, cfg=self.cfg)
+        return state_from_habs(habs, cfg=self.cfg)
+
+    def combine_weights(self, weights, state: ChannelState) -> jnp.ndarray:
+        """Survivor-renormalised combining weights for ``state``."""
+        return combine_weights(weights, state.gains)
+
+    def uncontrolled_gains(self, state: ChannelState) -> jnp.ndarray:
+        """Counterfactual receive gains with NO power control: every
+        client transmits at the full budget amplitude, so row k arrives
+        with gain |h_k| sqrt(P) / rho — the heterogeneous-magnitude
+        baseline the inversion exists to flatten (bench_channel.py
+        measures the variance shrink)."""
+        amp = jnp.sqrt(jnp.float32(self.cfg.power_budget))
+        return state.habs * amp / self.cfg.rho
+
+
+def split_survivors(
+    state: ChannelState,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(surviving row indices, truncated row indices) as int32 arrays —
+    the server-side scheduling view of a sampled state."""
+    trunc = jax.device_get(state.truncated)
+    keep = jnp.asarray([i for i, t in enumerate(trunc) if not t], jnp.int32)
+    drop = jnp.asarray([i for i, t in enumerate(trunc) if t], jnp.int32)
+    return keep, drop

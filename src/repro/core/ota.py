@@ -66,6 +66,7 @@ in the single-host FL simulator it is the fused kernel above. The noise
 is injected post-reduction at the calibrated receive SNR, exactly where
 the channel adds it.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -76,6 +77,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import channel as chan
 from repro.core import packing, quant
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -90,13 +92,14 @@ class OTAConfig:
     max_bits: int = 32
 
 
-def sample_channel(key, n_clients: int,
-                   fade_threshold: float = 0.1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def sample_channel(
+    key, n_clients: int, fade_threshold: float = 0.1
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Rayleigh fading gains. Returns (|h| (n,), participation mask (n,))."""
     kr, ki = jax.random.split(key)
     hr = jax.random.normal(kr, (n_clients,)) * jnp.sqrt(0.5)
     hi = jax.random.normal(ki, (n_clients,)) * jnp.sqrt(0.5)
-    h2 = hr ** 2 + hi ** 2
+    h2 = hr**2 + hi**2
     return jnp.sqrt(h2), h2 >= fade_threshold
 
 
@@ -124,10 +127,8 @@ def _client_grid(bits: jnp.ndarray, amax: jnp.ndarray):
     the data plane passes its symbols through untouched.
     """
     bits = jnp.asarray(bits, jnp.int32)
-    qmax = jnp.where(bits < 32,
-                     jnp.exp2((bits - 1).astype(jnp.float32)) - 1.0, 0.0)
-    scale = jnp.where(qmax > 0,
-                      jnp.maximum(amax, 1e-12) / jnp.maximum(qmax, 1.0), 1.0)
+    qmax = jnp.where(bits < 32, jnp.exp2((bits - 1).astype(jnp.float32)) - 1.0, 0.0)
+    scale = jnp.where(qmax > 0, jnp.maximum(amax, 1e-12) / jnp.maximum(qmax, 1.0), 1.0)
     return scale, qmax
 
 
@@ -144,8 +145,14 @@ def derive_sr_seed(key) -> jnp.ndarray:
     return jax.random.bits(k_quant, (), jnp.uint32)
 
 
-def quantize_uplink(row: jnp.ndarray, bits: int, sr_seed: jnp.ndarray,
-                    row_index: int, *, block: int = 0) -> packing.PackedRow:
+def quantize_uplink(
+    row: jnp.ndarray,
+    bits: int,
+    sr_seed: jnp.ndarray,
+    row_index: int,
+    *,
+    block: int = 0,
+) -> packing.PackedRow:
     """Modulate one client's flat packed row onto the wire (DESIGN.md §6).
 
     Stochastic-quantizes ``row`` at ``bits`` using the round dither stream
@@ -159,17 +166,14 @@ def quantize_uplink(row: jnp.ndarray, bits: int, sr_seed: jnp.ndarray,
     keeps the PR-2 per-update scale. The server dequantizes inside the
     fused aggregation pass — the f32 row never crosses the uplink.
     """
-    q, scale = quant.quantize_row_sr(row, bits, sr_seed, row_index,
-                                     block=block)
+    q, scale = quant.quantize_row_sr(row, bits, sr_seed, row_index, block=block)
     if packing.wire_kind(bits) == "int4":
         q = kops.pack_int4_rows(q)
     qblock = block if int(jnp.asarray(scale).size) > 1 else 0
-    return packing.PackedRow(data=q, scale=scale, bits=int(bits),
-                             qblock=qblock)
+    return packing.PackedRow(data=q, scale=scale, bits=int(bits), qblock=qblock)
 
 
-def dequantize_uplink(row: packing.PackedRow,
-                      n: Optional[int] = None) -> jnp.ndarray:
+def dequantize_uplink(row: packing.PackedRow, n: Optional[int] = None) -> jnp.ndarray:
     """Reconstruct the f32 row a ``PackedRow`` encodes (q * scale[block]).
 
     The simulator's data plane never does this — dequantization lives
@@ -194,11 +198,17 @@ def dequantize_uplink(row: packing.PackedRow,
     return out if n is None else out[:n]
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cfg", "n_valid", "use_kernel"))
-def ota_aggregate_flat(key, X: jnp.ndarray, bits: jnp.ndarray,
-                       weights: jnp.ndarray, *, cfg: OTAConfig,
-                       n_valid: int, use_kernel: bool = False):
+@functools.partial(jax.jit, static_argnames=("cfg", "n_valid", "use_kernel"))
+def ota_aggregate_flat(
+    key,
+    X: jnp.ndarray,
+    bits: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    cfg: OTAConfig,
+    n_valid: int,
+    use_kernel: bool = False,
+):
     """One-shot OTA aggregation of the flat (K, M) client-update matrix.
 
     X rows are zero-padded packed updates (``core.packing``); ``n_valid``
@@ -242,8 +252,7 @@ def round_channel(key, weights, *, cfg: OTAConfig):
     so a no-deadline streaming round reproduces their draws exactly.
     """
     k_chan, _, _ = jax.random.split(key, 3)
-    habs, participate = sample_channel(k_chan, weights.shape[0],
-                                       cfg.fade_threshold)
+    habs, participate = sample_channel(k_chan, weights.shape[0], cfg.fade_threshold)
     w = jnp.asarray(weights, jnp.float32) * participate
     w = w / jnp.maximum(jnp.sum(w), 1e-12)
     return habs, participate, w
@@ -266,43 +275,54 @@ def _awgn_epilogue(key, acc, *, cfg: OTAConfig, n_valid: int):
     return y, noise_std
 
 
-_packed_ref_jit = jax.jit(kref.ota_packed_ref,
-                          static_argnames=("qblock", "packed4"))
-_fold_ref_jit = jax.jit(kref.ota_fold_ref,
-                        static_argnames=("qblock", "packed4"))
+_packed_ref_jit = jax.jit(kref.ota_packed_ref, static_argnames=("qblock", "packed4"))
+_fold_ref_jit = jax.jit(kref.ota_fold_ref, static_argnames=("qblock", "packed4"))
 
 
-def _fold_groups(acc, kinds, datas, scales, wg, *, use_kernel: bool):
+def _fold_groups(acc, kinds, datas, scales, wg, *, gains=None, use_kernel: bool):
     """Fold grouped micro-batches into the running superposition ``acc``.
 
     kinds/datas/scales as produced by ``_group_rows``; ``wg`` the final
-    combining weights in group order. ``acc`` = None starts a fresh
-    accumulator: the first group's partial *is* the state (no add with a
-    zeros vector), every later group folds in via the fold kernel /
-    oracle (``kernels.ota_fold_packed`` / ``ref.ota_fold_ref``) — the
-    exact left-associated group sum the pre-§11 barrier loop computed,
-    so the synchronous path and a single-batch streaming fold are
-    bit-identical by construction.
+    combining weights in group order; ``gains`` the optional per-row
+    effective channel gains (DESIGN.md §12), also in group order — when
+    None the legacy (gain-free) kernel programs run, byte-identical to
+    the pre-channel path. ``acc`` = None starts a fresh accumulator: the
+    first group's partial *is* the state (no add with a zeros vector),
+    every later group folds in via the fold kernel / oracle
+    (``kernels.ota_fold_packed`` / ``ref.ota_fold_ref``) — the exact
+    left-associated group sum the pre-§11 barrier loop computed, so the
+    synchronous path and a single-batch streaming fold are bit-identical
+    by construction.
     """
     off = 0
     for (kind, qblock), data, scale in zip(kinds, datas, scales):
         kg = scale.shape[0]
         wseg = jax.lax.slice_in_dim(wg, off, off + kg)
+        gseg = None if gains is None else jax.lax.slice_in_dim(gains, off, off + kg)
         off += kg
         packed4 = kind == "int4"
         if acc is None:
             fn = kops.ota_dequant_superpose if use_kernel else _packed_ref_jit
-            acc = fn(data, scale, wseg, qblock=qblock, packed4=packed4)
+            acc = fn(data, scale, wseg, gains=gseg, qblock=qblock, packed4=packed4)
         else:
             fn = kops.ota_fold_packed if use_kernel else _fold_ref_jit
-            acc = fn(acc, data, scale, wseg, qblock=qblock, packed4=packed4)
+            acc = fn(acc, data, scale, wseg, gains=gseg, qblock=qblock, packed4=packed4)
     return acc
 
 
-def _aggregate_rows_flat(key, datas, scales, perm, weights, *,
-                         kinds: Tuple[Tuple[str, int], ...],
-                         cfg: OTAConfig,
-                         n_valid: int, use_kernel: bool = False):
+def _aggregate_rows_flat(
+    key,
+    datas,
+    scales,
+    perm,
+    weights,
+    *,
+    kinds: Tuple[Tuple[str, int], ...],
+    cfg: OTAConfig,
+    gains=None,
+    n_valid: int,
+    use_kernel: bool = False,
+):
     """Aggregate packed uplink rows grouped by wire storage class.
 
     datas/scales: per-group stacked (Kg, ...) symbol matrices and
@@ -323,10 +343,26 @@ def _aggregate_rows_flat(key, datas, scales, perm, weights, *,
     channel on K, each group fold on (Kg, kind, qblock), epilogue on
     (M, n_valid) — so a varying cohort reuses compiled code across
     rounds.
+
+    ``gains``: optional (K,) effective channel gains in cohort order
+    (``core.channel``, DESIGN.md §12). When given, the physical channel
+    REPLACES the legacy coin-flip draw: participation is ``gains > 0``
+    (truncated channel inversion), weights renormalise over the
+    surviving set (``channel.combine_weights`` — same guard as
+    ``round_channel``), and the per-row gain rides inside the fused
+    pass. The AWGN epilogue and dither stream are untouched either way.
     """
-    habs, participate, w = round_channel(key, weights, cfg=cfg)
+    if gains is None:
+        habs, participate, w = round_channel(key, weights, cfg=cfg)
+        gg = None
+    else:
+        gains = jnp.asarray(gains, jnp.float32)
+        participate = gains > 0
+        habs = None
+        w = chan.combine_weights(weights, gains)
+        gg = gains[perm]  # group-order view of the per-row gains
     wg = w[perm]  # group-order view of the cohort weights
-    acc = _fold_groups(None, kinds, datas, scales, wg, use_kernel=use_kernel)
+    acc = _fold_groups(None, kinds, datas, scales, wg, gains=gg, use_kernel=use_kernel)
     y, noise_std = _awgn_epilogue(key, acc, cfg=cfg, n_valid=n_valid)
     return y, habs, participate, noise_std
 
@@ -340,6 +376,7 @@ def _group_rows(rows: Sequence[packing.PackedRow]):
     groups — their (Kg, n_blocks) scale matrices have different widths,
     and each group's fused pass gets its own static qblock.
     """
+
     def _key(i):
         return (packing.KIND_RANK[rows[i].kind], rows[i].qblock)
 
@@ -351,16 +388,15 @@ def _group_rows(rows: Sequence[packing.PackedRow]):
         grp = [j for j in order[i:] if _key(j) == _key(order[i])]
         kinds.append((kind, qblock))
         datas.append(jnp.stack([rows[j].data for j in grp]))
-        scales.append(jnp.stack(
-            [jnp.atleast_1d(jnp.asarray(rows[j].scale)) for j in grp]))
+        scales.append(
+            jnp.stack([jnp.atleast_1d(jnp.asarray(rows[j].scale)) for j in grp])
+        )
         perm.extend(grp)
         i += len(grp)
-    return (tuple(kinds), tuple(datas), tuple(scales),
-            jnp.asarray(perm, jnp.int32))
+    return tuple(kinds), tuple(datas), tuple(scales), jnp.asarray(perm, jnp.int32)
 
 
-def staleness_weights(delays, grace: float, *,
-                      gamma: float = 0.5) -> jnp.ndarray:
+def staleness_weights(delays, grace: float, *, gamma: float = 0.5) -> jnp.ndarray:
     """Staleness discount for rows arriving ``delays`` seconds after the
     round's aggregation trigger (DESIGN.md §11).
 
@@ -402,12 +438,16 @@ class OtaAccumulator:
     is the documented semantic difference, not a bug.
     """
 
-    def __init__(self, layout: packing.Layout, cfg: OTAConfig = OTAConfig(),
-                 *, use_kernel: Optional[bool] = None):
+    def __init__(
+        self,
+        layout: packing.Layout,
+        cfg: OTAConfig = OTAConfig(),
+        *,
+        use_kernel: Optional[bool] = None,
+    ):
         self.layout = layout
         self.cfg = cfg
-        self.use_kernel = (_use_kernel_default() if use_kernel is None
-                           else use_kernel)
+        self.use_kernel = _use_kernel_default() if use_kernel is None else use_kernel
         self.reset()
 
     def reset(self) -> None:
@@ -424,16 +464,22 @@ class OtaAccumulator:
             return jnp.zeros((self.layout.padded_size,), jnp.float32)
         return self._acc
 
-    def fold(self, rows: Sequence[packing.PackedRow], weights,
-             *, staleness=None) -> "OtaAccumulator":
+    def fold(
+        self, rows: Sequence[packing.PackedRow], weights, *, staleness=None, gains=None
+    ) -> "OtaAccumulator":
         """Fold one micro-batch of packed uplink rows into the state.
 
         weights: final per-row combining weights (already channel-masked
         and renormalised by the caller); ``staleness``: optional per-row
-        discount multipliers (``staleness_weights``) for late arrivals.
-        Rows are grouped by (storage class, qblock) and each group runs
-        one fused fold pass — no (K, M) f32 matrix ever materialises.
-        Returns self for chaining: fold(fold(state, b0), b1)...
+        discount multipliers (``staleness_weights``) for late arrivals;
+        ``gains``: optional per-row effective channel gains
+        (``core.channel``, DESIGN.md §12) riding inside the fused fold —
+        None is byte-identical to the pre-channel fold, and a wave of
+        all-truncated rows (all gains 0) adds exact zeros, leaving the
+        accumulator value bit-unchanged. Rows are grouped by (storage
+        class, qblock) and each group runs one fused fold pass — no
+        (K, M) f32 matrix ever materialises. Returns self for chaining:
+        fold(fold(state, b0), b1)...
         """
         if len(rows) == 0:
             return self
@@ -441,8 +487,16 @@ class OtaAccumulator:
         if staleness is not None:
             w = w * jnp.asarray(staleness, jnp.float32)
         kinds, datas, scales, perm = _group_rows(rows)
-        self._acc = _fold_groups(self._acc, kinds, datas, scales, w[perm],
-                                 use_kernel=self.use_kernel)
+        g = None if gains is None else jnp.asarray(gains, jnp.float32)[perm]
+        self._acc = _fold_groups(
+            self._acc,
+            kinds,
+            datas,
+            scales,
+            w[perm],
+            gains=g,
+            use_kernel=self.use_kernel,
+        )
         self.n_folded += len(rows)
         self.wire_bytes += int(sum(r.wire_nbytes for r in rows))
         return self
@@ -456,8 +510,9 @@ class OtaAccumulator:
         ``reset`` to start the next round.
         """
         assert self._acc is not None, "finalize() before any fold()"
-        y, noise_std = _awgn_epilogue(key, self._acc, cfg=self.cfg,
-                                      n_valid=self.layout.size)
+        y, noise_std = _awgn_epilogue(
+            key, self._acc, cfg=self.cfg, n_valid=self.layout.size
+        )
         info = {
             "noise_std": float(noise_std),
             "n_folded": self.n_folded,
@@ -485,6 +540,7 @@ def ota_aggregate_packed(
     layout: packing.Layout,
     cfg: OTAConfig = OTAConfig(),
     *,
+    gains=None,
     use_kernel: Optional[bool] = None,
 ) -> Tuple[Pytree, Dict[str, Any]]:
     """Aggregate pre-packed client rows; unpack the result per ``layout``.
@@ -497,28 +553,62 @@ def ota_aggregate_packed(
     then the rows arrive already quantized+bit-packed and the pass only
     dequantizes (DESIGN.md §5-§6). Same round key => identical aggregate
     either way (same dither stream, channel, and noise draws).
+
+    ``gains``: optional (K,) effective channel gains from the physical
+    channel model (``core.channel``, DESIGN.md §12) — packed rows only.
+    When given it replaces the legacy participation coin-flip:
+    truncated rows (gain 0) are excluded from the weight normaliser and
+    contribute exact zeros, surviving rows superpose scaled by their
+    misalignment gain inside the fused pass. ``gains=None`` is bitwise
+    identical to the pre-channel aggregation for the same round key.
     """
     if use_kernel is None:
         use_kernel = _use_kernel_default()
     if packing.is_packed_rows(X):
         rows: Sequence[packing.PackedRow] = X
         if bits is not None:
-            assert [int(b) for b in bits] == [r.bits for r in rows], \
+            assert [int(b) for b in bits] == [r.bits for r in rows], (
                 "bits arg disagrees with PackedRow.bits"
+            )
         kinds, datas, scales, perm = _group_rows(rows)
         y, habs, participate, noise_std = _aggregate_rows_flat(
-            key, datas, scales, perm,
+            key,
+            datas,
+            scales,
+            perm,
             jnp.asarray(weights, jnp.float32),
-            kinds=kinds, cfg=cfg, n_valid=layout.size,
-            use_kernel=use_kernel)
-        info = _info_dict(habs, participate, noise_std)
+            kinds=kinds,
+            cfg=cfg,
+            gains=gains,
+            n_valid=layout.size,
+            use_kernel=use_kernel,
+        )
+        if gains is None:
+            info = _info_dict(habs, participate, noise_std)
+        else:
+            participate = jax.device_get(participate)
+            info = {
+                "participation": [bool(p) for p in participate],
+                "n_participating": int(participate.sum()),
+                "n_truncated": int((~participate).sum()),
+                "noise_std": float(noise_std),
+                "channel_gains": [float(g) for g in jax.device_get(gains)],
+            }
         info["uplink_bytes"] = int(sum(r.wire_nbytes for r in rows))
         info["uplink_bytes_f32"] = 4 * layout.padded_size * len(rows)
     else:
+        assert gains is None, (
+            "gains= is a packed-uplink feature (PackedRow cohorts only)"
+        )
         y, habs, participate, noise_std = ota_aggregate_flat(
-            key, X, jnp.asarray(bits, jnp.int32),
+            key,
+            X,
+            jnp.asarray(bits, jnp.int32),
             jnp.asarray(weights, jnp.float32),
-            cfg=cfg, n_valid=layout.size, use_kernel=use_kernel)
+            cfg=cfg,
+            n_valid=layout.size,
+            use_kernel=use_kernel,
+        )
         info = _info_dict(habs, participate, noise_std)
     agg = packing.unpack(y, layout, cast=False)
     return agg, info
@@ -550,13 +640,15 @@ def ota_aggregate(
     """
     if packing.is_packed_rows(updates):
         assert layout is not None, "packed rows need an explicit layout"
-        return ota_aggregate_packed(key, updates, bits, weights, layout,
-                                    cfg, use_kernel=use_kernel)
+        return ota_aggregate_packed(
+            key, updates, bits, weights, layout, cfg, use_kernel=use_kernel
+        )
     if layout is None:
         layout = packing.make_layout(updates[0])
     X = packing.pack_batch(updates, layout)
-    return ota_aggregate_packed(key, X, bits, weights, layout, cfg,
-                                use_kernel=use_kernel)
+    return ota_aggregate_packed(
+        key, X, bits, weights, layout, cfg, use_kernel=use_kernel
+    )
 
 
 def ota_aggregate_pertree(
@@ -597,13 +689,15 @@ def ota_aggregate_pertree(
             dq_leaves = [l.astype(jnp.float32) for l in leaves_i]
         else:
             qmax = float(quant.qrange(b))
-            amax = jnp.max(jnp.stack(
-                [jnp.max(jnp.abs(l.astype(jnp.float32))) for l in leaves_i]))
+            amax = jnp.max(
+                jnp.stack([jnp.max(jnp.abs(l.astype(jnp.float32))) for l in leaves_i])
+            )
             scale = jnp.maximum(amax, 1e-12) / qmax
             u_full = sr_dither(sr_seed, jnp.uint32(i), positions)
             dq_leaves = []
-            for leaf, off, size, shape in zip(leaves_i, layout.offsets,
-                                              layout.sizes, layout.shapes):
+            for leaf, off, size, shape in zip(
+                leaves_i, layout.offsets, layout.sizes, layout.shapes
+            ):
                 u = jax.lax.slice_in_dim(u_full, off, off + size).reshape(shape)
                 scaled = leaf.astype(jnp.float32) / scale
                 floor = jnp.floor(scaled)
@@ -614,20 +708,19 @@ def ota_aggregate_pertree(
         agg_leaves = [a + wi * l for a, l in zip(agg_leaves, dq_leaves)]
 
     total_elems = layout.size
-    agg_norm2 = sum(jnp.sum(l ** 2) for l in agg_leaves)
+    agg_norm2 = sum(jnp.sum(l**2) for l in agg_leaves)
     noise_std = jnp.sqrt(agg_norm2 / total_elems * 10 ** (-cfg.snr_db / 10))
     n_full = jax.random.normal(k_noise, (total_elems,))
     noisy = [
-        a + noise_std * jax.lax.slice_in_dim(n_full, off, off + size).reshape(
-            a.shape)
+        a + noise_std * jax.lax.slice_in_dim(n_full, off, off + size).reshape(a.shape)
         for a, off, size in zip(agg_leaves, layout.offsets, layout.sizes)
     ]
-    return jax.tree.unflatten(treedef, noisy), _info_dict(
-        habs, participate, noise_std)
+    return jax.tree.unflatten(treedef, noisy), _info_dict(habs, participate, noise_std)
 
 
-def channel_uses(bits: Sequence[int], n_params: int,
-                 cfg: OTAConfig = OTAConfig()) -> int:
+def channel_uses(
+    bits: Sequence[int], n_params: int, cfg: OTAConfig = OTAConfig()
+) -> int:
     """OTA channel uses for one aggregation round.
 
     Mixed-precision modulation shares symbols across precisions: the round

@@ -20,6 +20,7 @@ Fine for update/weight trees (the data plane) and f32/bf16 params;
 trees carrying large integer state (step counters, RNG keys) need a
 side channel.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -165,8 +166,11 @@ class PackedRow:
 
 def is_packed_rows(x: Any) -> bool:
     """True when ``x`` is a sequence of ``PackedRow`` (vs a (K, M) matrix)."""
-    return (isinstance(x, (list, tuple)) and len(x) > 0
-            and all(isinstance(r, PackedRow) for r in x))
+    return (
+        isinstance(x, (list, tuple))
+        and len(x) > 0
+        and all(isinstance(r, PackedRow) for r in x)
+    )
 
 
 def make_layout(tree: Pytree, block: int = DEFAULT_BLOCK) -> Layout:
@@ -211,8 +215,9 @@ def unpack(flat: jnp.ndarray, layout: Layout, *, cast: bool = True) -> Pytree:
     """Inverse of ``pack``. ``cast=False`` keeps every leaf f32 (the OTA
     aggregation path hands f32 aggregates to the server optimizer)."""
     leaves = []
-    for shape, dtype, off, size in zip(layout.shapes, layout.dtypes,
-                                       layout.offsets, layout.sizes):
+    for shape, dtype, off, size in zip(
+        layout.shapes, layout.dtypes, layout.offsets, layout.sizes
+    ):
         leaf = jax.lax.slice_in_dim(flat, off, off + size).reshape(shape)
         leaves.append(leaf.astype(dtype) if cast else leaf)
     return jax.tree.unflatten(layout.treedef, leaves)

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 DEVICE_CLASSES: Dict[str, Dict] = {
     # cpu_gflops ~ sustained fp32; energy_per_mac_pj at 32-bit
@@ -73,21 +73,33 @@ class DeviceSpec:
     energy_per_mac_pj: float
     power_state: str = "normal"  # normal | low_battery | charging
     privacy_hide_specs: bool = False
+    # radio state observed by the server per round (core/channel.py,
+    # DESIGN.md §12): EMA of the realised per-client receive SNR and the
+    # running truncation rate. Server-side measurements, so they survive
+    # the privacy flag (nothing the device has to disclose).
+    channel_snr_db: Optional[float] = None
+    truncation_rate: float = 0.0
 
     def features(self) -> Dict[str, float]:
         """Numeric feature dict for RAG keys (respecting privacy flag)."""
         if self.privacy_hide_specs:
             # only the coarse class survives privacy settings
-            return {"class_" + self.device_class: 2.0}
-        # class weighted up: device-class is the dominant predictor of the
-        # quantization-performance deviations the HQP DB exists to learn
-        return {
-            "class_" + self.device_class: 2.0,
-            "cpu_gflops": self.cpu_gflops / 600.0,
-            "ram_gb": self.ram_gb / 16.0,
-            "battery": (self.battery_mah or 0) / 8000.0,
-            "power_" + self.power_state: 0.5,
-        }
+            feats = {"class_" + self.device_class: 2.0}
+        else:
+            # class weighted up: device-class is the dominant predictor
+            # of the quantization-performance deviations the HQP DB
+            # exists to learn
+            feats = {
+                "class_" + self.device_class: 2.0,
+                "cpu_gflops": self.cpu_gflops / 600.0,
+                "ram_gb": self.ram_gb / 16.0,
+                "battery": (self.battery_mah or 0) / 8000.0,
+                "power_" + self.power_state: 0.5,
+            }
+        if self.channel_snr_db is not None:
+            feats["channel_snr_db"] = self.channel_snr_db / 30.0
+            feats["truncation_rate"] = self.truncation_rate
+        return feats
 
 
 def make_fleet(n: int, seed: int = 0) -> List[DeviceSpec]:

@@ -10,6 +10,7 @@ The jnp implementations here are the *reference semantics*; the Pallas
 kernels in ``repro.kernels`` implement the same ops for TPU and are tested
 against these (see kernels/*/ref.py which re-export from here).
 """
+
 from __future__ import annotations
 
 import functools
@@ -68,13 +69,22 @@ def fake_quant(
     return dequantize(q, scale, bits).astype(x.dtype)
 
 
-_STORAGE_DTYPE = {"int4": jnp.int8, "int8": jnp.int8,
-                  "int16": jnp.int16, "int32": jnp.int32}
+_STORAGE_DTYPE = {
+    "int4": jnp.int8,
+    "int8": jnp.int8,
+    "int16": jnp.int16,
+    "int32": jnp.int32,
+}
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "block"))
-def quantize_row_sr(row: jnp.ndarray, bits: int, sr_seed: jnp.ndarray,
-                    row_index: jnp.ndarray, block: int = 0):
+def quantize_row_sr(
+    row: jnp.ndarray,
+    bits: int,
+    sr_seed: jnp.ndarray,
+    row_index: jnp.ndarray,
+    block: int = 0,
+):
     """Client-side uplink quantization of one flat packed row.
 
     Stochastic rounding driven by the OTA data plane's positional dither
@@ -122,8 +132,9 @@ def quantize_row_sr(row: jnp.ndarray, bits: int, sr_seed: jnp.ndarray,
         scale = jnp.maximum(amax, 1e-12) / qmax        # ()
         scale_cols = scale
     pos = jnp.arange(M, dtype=jnp.uint32)
-    u = sr_dither(jnp.asarray(sr_seed, jnp.uint32),
-                  jnp.asarray(row_index, jnp.uint32), pos)
+    u = sr_dither(
+        jnp.asarray(sr_seed, jnp.uint32), jnp.asarray(row_index, jnp.uint32), pos
+    )
     scaled = row / scale_cols
     floor = jnp.floor(scaled)
     q = floor + (u < (scaled - floor)).astype(jnp.float32)
@@ -192,5 +203,5 @@ def quant_error(x: jnp.ndarray, bits: int) -> jnp.ndarray:
     """RMS relative quantization error (used by perf/accuracy priors)."""
     fq = fake_quant(x, bits)
     return jnp.sqrt(jnp.mean((x - fq) ** 2)) / jnp.maximum(
-        jnp.sqrt(jnp.mean(x ** 2)), 1e-12
+        jnp.sqrt(jnp.mean(x**2)), 1e-12
     )

@@ -145,6 +145,8 @@ class FLClient:
         sr_seed: Optional[jnp.ndarray] = None,
         uplink_row: int = 0,
         quant_block: int = 0,
+        channel_gain: Optional[float] = None,
+        channel_habs: Optional[float] = None,
     ) -> Tuple[Any, Dict[str, float]]:
         """Run local steps; return (delta, metrics).
 
@@ -159,6 +161,11 @@ class FLClient:
         f32 per ``quant_block`` symbols, the round config's
         ``FLConfig.quant_block``; 0 = one per-update scale). Without
         ``layout``: the parameter-delta pytree (legacy shape).
+
+        ``channel_gain``/``channel_habs``: this round's realised channel
+        state for the client (``core.channel``, DESIGN.md §12) — echoed
+        into the returned metrics as uplink metadata, the per-round
+        radio report that rides alongside the packed row.
         """
         jitted, opt = self._step_fn(bits, lr, fedprox_mu)
         state = {
@@ -192,8 +199,13 @@ class FLClient:
                 delta = ota.quantize_uplink(
                     delta, bits, sr_seed, uplink_row, block=quant_block
                 )
-        return delta, {
+        metrics = {
             "loss_first": losses[0],
             "loss_last": losses[-1],
             "n_samples": len(utts),
         }
+        if channel_gain is not None:
+            metrics["channel_gain"] = float(channel_gain)
+        if channel_habs is not None:
+            metrics["channel_habs"] = float(channel_habs)
+        return delta, metrics

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, FLConfig, get_arch
+from repro.core import channel as chanmod
 from repro.core import ota, packing
 from repro.core.profiling.hardware import make_fleet
 from repro.core.profiling.planner import (
@@ -63,19 +64,38 @@ def make_planner(cfg: FLConfig) -> BasePlanner:
     raise ValueError(f"unknown planner {cfg.planner!r}")
 
 
+def _mix_stream(*parts: int) -> int:
+    """Hash-combine stream coordinates into one 32-bit RNG seed.
+
+    Boost-style avalanche mix: every part perturbs the whole state, so
+    distinct (seed, rnd, salt) triples land in distinct streams. The
+    previous ``seed * salt + rnd`` collapsed at seed = 0 (the FLConfig
+    default!): every salt named the SAME stream, so the dropout draw and
+    the streaming latency draw were correlated copies of each other —
+    the latent seed-reuse hazard tests/test_channel.py now pins closed.
+    """
+    h = 0
+    for p in parts:
+        h ^= (int(p) & 0xFFFFFFFF) + 0x9E3779B9 + \
+            ((h << 6) & 0xFFFFFFFF) + (h >> 2)
+        h &= 0xFFFFFFFF
+    return h
+
+
 def round_rng(seed: int, rnd: int, salt: int = 1237) -> np.random.RandomState:
     """Seeded per-round numpy RNG (dropout draws, latency draws, ...).
 
     One helper shared by both round loops so a (seed, rnd, salt) triple
-    names exactly one stream — the streaming server's extra draws use
-    distinct salts and never perturb the synchronous streams.
+    names exactly one stream (``_mix_stream``) — the streaming server's
+    extra draws use distinct salts and never perturb the synchronous
+    streams, at every seed including 0.
     """
-    return np.random.RandomState(seed * salt + rnd)
+    return np.random.RandomState(_mix_stream(seed, rnd, salt))
 
 
 def round_drift_rng(seed: int, rnd: int) -> random.Random:
     """Seeded per-round stdlib RNG for the context/hardware drift stage."""
-    return random.Random(seed * 7919 + rnd)
+    return random.Random(_mix_stream(seed, rnd, 7919))
 
 
 @dataclasses.dataclass
@@ -117,6 +137,20 @@ class FLServer:
         # one flat layout for the whole federation: clients pack their
         # deltas onto it, the OTA data plane aggregates rows (core/ota.py)
         self.layout = packing.make_layout(self.params)
+        # physical OTA channel (DESIGN.md §12): None = legacy ideal path
+        if fl_cfg.channel_model == "fading":
+            self.channel: Optional[chanmod.ChannelModel] = chanmod.ChannelModel(
+                chanmod.ChannelConfig(
+                    fade_threshold=fl_cfg.fade_threshold,
+                    power_budget=fl_cfg.tx_power_budget,
+                    pathloss_spread_db=fl_cfg.pathloss_spread_db,
+                )
+            )
+        elif fl_cfg.channel_model == "ideal":
+            self.channel = None
+        else:
+            raise ValueError(f"unknown channel_model {fl_cfg.channel_model!r}")
+        self._chan_hist: Dict[int, List[int]] = {}  # id -> [n_trunc, n_seen]
         self.round_logs: List[RoundLog] = []
         self._rng = np.random.RandomState(fl_cfg.seed + 7)
 
@@ -146,18 +180,36 @@ class FLServer:
         bits = {d.user_id: d.bits for d in decisions}
         return decisions, bits
 
-    def _train_cohort(self, decisions, ids: List[int], rnd: int, sr_seed):
+    def _train_cohort(self, decisions, ids: List[int], rnd: int, sr_seed,
+                      chan_state=None):
         """Local training at the planned precision (stragglers drop out).
 
-        Returns (deltas, weights, losses, active_ids) with ``deltas[j]``
-        packed for uplink row j — the cohort order both round loops fold
-        in.
+        Returns (deltas, weights, losses, active_ids, row_gains) with
+        ``deltas[j]`` packed for uplink row j — the cohort order both
+        round loops fold in. ``chan_state``: this round's sampled
+        ``channel.ChannelState`` over the cohort (None = ideal channel);
+        truncated clients are planned around — they skip local training
+        entirely (the server knows they cannot invert their channel this
+        round) — and ``row_gains[j]`` is row j's effective receive gain,
+        aligned with ``deltas`` (None when ideal).
         """
         deltas, weights, losses, active_ids = [], [], [], []
+        row_gains: Optional[List[float]] = None
+        gains_np = habs_np = None
+        if chan_state is not None:
+            row_gains = []
+            gains_np = np.asarray(jax.device_get(chan_state.gains))
+            habs_np = np.asarray(jax.device_get(chan_state.habs))
         drop_rng = round_rng(self.cfg.seed, rnd)
-        for d, i in zip(decisions, ids):
+        for pos, (d, i) in enumerate(zip(decisions, ids)):
+            if gains_np is not None and gains_np[pos] <= 0.0:
+                continue  # deep fade: truncated, planned around
             if self.cfg.dropout_prob and drop_rng.rand() < self.cfg.dropout_prob:
                 continue  # straggler: never reports this round
+            chan_kw = {}
+            if gains_np is not None:
+                chan_kw = dict(channel_gain=float(gains_np[pos]),
+                               channel_habs=float(habs_np[pos]))
             delta, m = self.clients[i].local_update(
                 self.params,
                 d.bits,
@@ -170,8 +222,11 @@ class FLServer:
                 sr_seed=sr_seed,
                 uplink_row=len(deltas),
                 quant_block=self.cfg.quant_block,
+                **chan_kw,
             )
             deltas.append(delta)
+            if row_gains is not None:
+                row_gains.append(m["channel_gain"])
             # FedAvg weight = samples x estimated contribution C_q (the
             # strategy's lever: class-equal upweights minority-rich
             # clients' updates, majority-centric the reverse; plain
@@ -184,7 +239,36 @@ class FLServer:
             weights.append(m["n_samples"] * contrib)
             losses.append(m["loss_last"])
             active_ids.append(i)
-        return deltas, weights, losses, active_ids
+        return deltas, weights, losses, active_ids, row_gains
+
+    def _sample_round_channel(self, round_key, ids: List[int]):
+        """Sample this round's physical channel over the selected cohort.
+
+        Drawn over the FULL cohort (before dropouts) so barrier and
+        streaming rounds share the same realisation for the same round
+        key and a client's draw doesn't depend on who else dropped.
+        Records the realised radio state on each ``DeviceSpec``
+        (``channel_snr_db`` EMA + running ``truncation_rate``) — the
+        profiling features the RAG planner sees next round. Returns the
+        ``ChannelState`` or None on the ideal channel.
+        """
+        if self.channel is None:
+            return None
+        state = self.channel.sample(round_key, len(ids))
+        snr = np.asarray(jax.device_get(state.snr_db(self.cfg.snr_db)))
+        trunc = np.asarray(jax.device_get(state.truncated))
+        for pos, i in enumerate(ids):
+            hist = self._chan_hist.setdefault(i, [0, 0])
+            hist[0] += int(trunc[pos])
+            hist[1] += 1
+            spec = self.fleet[i]
+            spec.truncation_rate = hist[0] / hist[1]
+            prev = spec.channel_snr_db
+            spec.channel_snr_db = (
+                float(snr[pos]) if prev is None
+                else 0.7 * prev + 0.3 * float(snr[pos])
+            )
+        return state
 
     def _apply_update(self, agg: Pytree) -> None:
         # server momentum (FedAvgM) on the aggregated update
@@ -225,17 +309,20 @@ class FLServer:
         # sees PackedRow wire rows, never the f32 (K, M) matrix.
         round_key = jax.random.key(self.cfg.seed * 131 + rnd)
         sr_seed = ota.derive_sr_seed(round_key)
-        deltas, weights, losses, active_ids = self._train_cohort(
-            decisions, ids, rnd, sr_seed
+        chan_state = self._sample_round_channel(round_key, ids)
+        deltas, weights, losses, active_ids, row_gains = self._train_cohort(
+            decisions, ids, rnd, sr_seed, chan_state
         )
-        if not deltas:  # everyone dropped: skip the aggregation
+        if not deltas:  # everyone dropped (or truncated): skip aggregation
             log = RoundLog(rnd, bits, 0.0, 0.0, 0, float("nan"))
             self.round_logs.append(log)
             return log
 
         # ---- mixed-precision OTA aggregation: the clients' quantized,
         # bit-packed wire rows go straight into the fused dequant +
-        # superpose data plane (grouped per storage class, DESIGN.md §5)
+        # superpose data plane (grouped per storage class, DESIGN.md §5).
+        # Under the fading channel the reporting rows' effective gains
+        # ride inside the fused pass (gains=, DESIGN.md §12).
         agg, info = ota.ota_aggregate_packed(
             round_key,
             deltas,
@@ -243,6 +330,8 @@ class FLServer:
             weights,
             self.layout,
             ota.OTAConfig(snr_db=self.cfg.snr_db),
+            gains=None if row_gains is None else jnp.asarray(
+                row_gains, jnp.float32),
         )
         self.last_uplink_bytes = info["uplink_bytes"]
         self._apply_update(agg)
@@ -465,8 +554,9 @@ class StreamingFLServer(FLServer):
 
         round_key = jax.random.key(self.cfg.seed * 131 + rnd)
         sr_seed = ota.derive_sr_seed(round_key)
-        deltas, weights, losses, active_ids = self._train_cohort(
-            decisions, ids, rnd, sr_seed
+        chan_state = self._sample_round_channel(round_key, ids)
+        deltas, weights, losses, active_ids, row_gains = self._train_cohort(
+            decisions, ids, rnd, sr_seed, chan_state
         )
         if not deltas:  # everyone dropped in training: skip aggregation
             log = StreamRoundLog(rnd, bits, 0.0, 0.0, 0, float("nan"))
@@ -499,28 +589,48 @@ class StreamingFLServer(FLServer):
 
         # ---- channel + weight renormalisation over the counted set, in
         # cohort order, at trigger time (one draw per round — the same
-        # key split as the synchronous path, ota.round_channel)
+        # key split as the synchronous path, ota.round_channel). Under
+        # the fading channel the legacy coin-flip is replaced by the
+        # realised gains: truncated rows never trained (planned around),
+        # so every counted row has gain > 0; weights renormalise over
+        # the counted set and the gains ride inside the fused fold.
         ocfg = ota.OTAConfig(snr_db=self.cfg.snr_db)
         w_counted = jnp.asarray([weights[j] for j in counted], jnp.float32)
-        habs, participate, w = ota.round_channel(round_key, w_counted, cfg=ocfg)
+        if row_gains is None:
+            g_counted = None
+            habs, participate, w = ota.round_channel(
+                round_key, w_counted, cfg=ocfg)
+        else:
+            g_counted = jnp.asarray(
+                [row_gains[j] for j in counted], jnp.float32)
+            participate = g_counted > 0
+            w = chanmod.combine_weights(w_counted, g_counted)
 
         # ---- fold arrivals into the persistent accumulator: the on-time
         # wave at the trigger, then the staleness-discounted late wave
         pos = {j: p for p, j in enumerate(counted)}
         acc = ota.OtaAccumulator(self.layout, ocfg)
+
+        def _gsel(idx):
+            if g_counted is None:
+                return None
+            return g_counted[jnp.asarray([pos[j] for j in idx], jnp.int32)]
+
         if plan.late:
             stale = dict(zip(plan.late, plan.staleness))
             on_sorted, late_sorted = sorted(plan.on_time), sorted(plan.late)
             w_on = w[jnp.asarray([pos[j] for j in on_sorted], jnp.int32)]
             w_late = w[jnp.asarray([pos[j] for j in late_sorted], jnp.int32)]
-            acc.fold([deltas[j] for j in on_sorted], w_on)
+            acc.fold([deltas[j] for j in on_sorted], w_on,
+                     gains=_gsel(on_sorted))
             acc.fold(
                 [deltas[j] for j in late_sorted],
                 w_late,
                 staleness=[stale[j] for j in late_sorted],
+                gains=_gsel(late_sorted),
             )
         else:  # single wave: identical fold to the synchronous barrier
-            acc.fold([deltas[j] for j in counted], w)
+            acc.fold([deltas[j] for j in counted], w, gains=g_counted)
         agg, info = acc.finalize(round_key)
         self.last_uplink_bytes = info["uplink_bytes"]
         self._apply_update(agg)

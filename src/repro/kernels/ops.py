@@ -95,7 +95,7 @@ def ota_quantize_superpose(x: jnp.ndarray, scale: jnp.ndarray,
 
 @functools.partial(jax.jit, static_argnames=("qblock", "packed4"))
 def ota_dequant_superpose(q: jnp.ndarray, scale: jnp.ndarray,
-                          w: jnp.ndarray, *, qblock: int = 0,
+                          w: jnp.ndarray, *, gains=None, qblock: int = 0,
                           packed4: bool = False):
     """Receiver half of the packed uplink: dequant + weighted superpose.
 
@@ -103,6 +103,10 @@ def ota_dequant_superpose(q: jnp.ndarray, scale: jnp.ndarray,
     uint8 row-major int4 nibbles when ``packed4`` (``pack_int4_rows``).
     scale: (K,) per-update scales or the (K, n_blocks) blockwise scale
     matrix (``qblock`` symbols per scale; 0 = per-update). w: (K,).
+    ``gains``: optional (K,) per-row effective channel gain (fading +
+    truncated channel inversion, ``core/channel.py``, DESIGN.md §12) —
+    each row's combining coefficient becomes w_k * g_k inside the pass;
+    None is the unit channel and runs the exact legacy program.
     Returns the (M,) f32 partial aggregate for this storage group. The
     stochastic quantization happened client-side
     (``core.quant.quantize_row_sr``); this pass never materialises the
@@ -114,7 +118,7 @@ def ota_dequant_superpose(q: jnp.ndarray, scale: jnp.ndarray,
     bc = _otaf.BLOCK_COLS // 2 if packed4 else _otaf.BLOCK_COLS
     M = 2 * q.shape[1] if packed4 else q.shape[1]
     qp, _ = _pad_to(q, bc, axis=1)
-    out = _otaf.ota_packed_2d(qp, scale, w, qblock=qblock,
+    out = _otaf.ota_packed_2d(qp, scale, w, gains=gains, qblock=qblock,
                               packed4=packed4, interpret=interpret)
     return out[:M]
 
@@ -156,7 +160,7 @@ def topk_cosine(qm: jnp.ndarray, recs: jnp.ndarray,
 
 @functools.partial(jax.jit, static_argnames=("qblock", "packed4"))
 def ota_fold_packed(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
-                    w: jnp.ndarray, *, qblock: int = 0,
+                    w: jnp.ndarray, *, gains=None, qblock: int = 0,
                     packed4: bool = False):
     """Fold one packed micro-batch into the persistent superposition state.
 
@@ -164,8 +168,10 @@ def ota_fold_packed(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
     (M,) f32 accumulator (start from zeros or a prior
     ``ota_dequant_superpose`` partial), q/scale/w one micro-batch of
     same-storage-class client rows exactly as in
-    ``ota_dequant_superpose``. Returns acc + the batch's weighted
-    dequantized superposition, so a round becomes
+    ``ota_dequant_superpose`` — including the optional (K,) per-row
+    channel ``gains`` (DESIGN.md §12; None = unit channel, the exact
+    legacy program). Returns acc + the batch's weighted dequantized
+    superposition, so a round becomes
     fold(fold(fold(state, batch0), batch1), ...) instead of one (K, M)
     barrier. Oracle: ``ref.ota_fold_ref`` (bit-equal; the jnp path is
     the CPU perf path, as with the other OTA kernels).
@@ -176,7 +182,7 @@ def ota_fold_packed(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
     qp, _ = _pad_to(q, bc, axis=1)
     Mp = 2 * qp.shape[1] if packed4 else qp.shape[1]
     accp, _ = _pad_to(acc, Mp)
-    out = _otaf.ota_fold_2d(accp, qp, scale, w, qblock=qblock,
+    out = _otaf.ota_fold_2d(accp, qp, scale, w, gains=gains, qblock=qblock,
                             packed4=packed4, interpret=interpret)
     return out[:M]
 

@@ -146,9 +146,27 @@ def _tile_scale_cols(scale_ref, i, K, B, qblock, aligned):
     return jnp.take(scales, pos // qblock, axis=1, mode="clip")
 
 
-def _dq_superpose_kernel(scale_ref, w_ref, q_ref, o_ref, *, qblock=0,
-                         aligned=False):
-    """Dequantize pre-quantized rows and superpose: acc = sum_k w_k s_k q_k.
+def _row_coeff(w_ref, g_ref):
+    """Per-row combining coefficient: w_k, or w_k * g_k under fading.
+
+    ``g_ref`` is the (K, 1) effective channel gain column (DESIGN.md
+    §12: truncated-inversion receive gain in [0, 1]; 0 = truncated
+    client) — present only in the gain-aware call variants. The gain
+    multiplies the weight BEFORE the symbol math, so the gained kernel
+    runs exactly the ungained ops on a pre-scaled weight column: with
+    ``g_ref`` absent the coefficient is untouched (bitwise the legacy
+    path), and a unit gain multiplies by 1.0, which is exact in f32.
+    """
+    w = w_ref[...].astype(jnp.float32)
+    if g_ref is not None:
+        w = w * g_ref[...].astype(jnp.float32)
+    return w
+
+
+def _dq_superpose_kernel(scale_ref, w_ref, *refs, qblock=0, aligned=False,
+                         gained=False):
+    """Dequantize pre-quantized rows and superpose: acc = sum_k w_k s_k q_k
+    (times the per-row channel gain g_k in the gain-aware variant).
 
     q_ref: (K, B) int8/int16/f32 tile — client-side quantized symbols (or
     f32 passthrough rows with scale 1). The stochastic rounding already
@@ -156,18 +174,21 @@ def _dq_superpose_kernel(scale_ref, w_ref, q_ref, o_ref, *, qblock=0,
     ``_fused_kernel`` there is no dither here — just the receiver-side
     dequant+reduction over the packed wire format. scale_ref: this
     tile's slice of the blockwise scale matrix (``_tile_scale_cols``;
-    n_blocks = 1: per-update).
+    n_blocks = 1: per-update). With ``gained`` an extra (K, 1) gain
+    column rides between w_ref and the symbol tile — the same
+    shape trick as the blockwise scale matrix, resident every grid step.
     """
+    g_ref, (q_ref, o_ref) = (refs[0], refs[1:]) if gained else (None, refs)
     i = pl.program_id(0)
     K, B = q_ref.shape
     scale = _tile_scale_cols(scale_ref, i, K, B, qblock, aligned)
     dq = q_ref[...].astype(jnp.float32) * scale
-    o_ref[...] = jnp.sum(dq * w_ref[...].astype(jnp.float32),
+    o_ref[...] = jnp.sum(dq * _row_coeff(w_ref, g_ref),
                          axis=0).reshape(o_ref.shape)
 
 
-def _dq_superpose_int4_kernel(scale_ref, w_ref, p_ref, o_ref, *, qblock=0,
-                              aligned=False):
+def _dq_superpose_int4_kernel(scale_ref, w_ref, *refs, qblock=0,
+                              aligned=False, gained=False):
     """int4 variant: unpack two symbols per byte in-VMEM, then dequant+sum.
 
     p_ref: (K, B//2) uint8 tile of row-major packed nibbles; the HBM read
@@ -175,17 +196,18 @@ def _dq_superpose_int4_kernel(scale_ref, w_ref, p_ref, o_ref, *, qblock=0,
     positions (two per packed byte), so the scale expansion happens
     after the in-VMEM unpack.
     """
+    g_ref, (p_ref, o_ref) = (refs[0], refs[1:]) if gained else (None, refs)
     i = pl.program_id(0)
     q = _unpack_nibbles(p_ref[...])
     K, B = q.shape
     scale = _tile_scale_cols(scale_ref, i, K, B, qblock, aligned)
     dq = q.astype(jnp.float32) * scale
-    o_ref[...] = jnp.sum(dq * w_ref[...].astype(jnp.float32),
+    o_ref[...] = jnp.sum(dq * _row_coeff(w_ref, g_ref),
                          axis=0).reshape(o_ref.shape)
 
 
-def _fold_superpose_kernel(scale_ref, w_ref, q_ref, acc_ref, o_ref, *,
-                           qblock=0, aligned=False):
+def _fold_superpose_kernel(scale_ref, w_ref, *refs, qblock=0, aligned=False,
+                           gained=False):
     """Streaming fold: out = acc + sum_k w_k s_k q_k (DESIGN.md §11).
 
     The persistent-accumulator variant of ``_dq_superpose_kernel``: the
@@ -194,25 +216,32 @@ def _fold_superpose_kernel(scale_ref, w_ref, q_ref, acc_ref, o_ref, *,
     tile. Per-column math is identical to the barrier kernel plus one
     elementwise add, so fold(zeros, batch) == superpose(batch) and
     fold(fold(state, b0), b1) is exactly the left-associated group sum
-    the synchronous path computes (core/ota._fold_groups).
+    the synchronous path computes (core/ota._fold_groups). The
+    gain-aware variant folds with w_k * g_k row coefficients
+    (``_row_coeff``) — a wave of all-truncated rows (every g_k = 0)
+    adds exact zeros and leaves the accumulator value unchanged.
     """
+    g_ref, (q_ref, acc_ref, o_ref) = \
+        (refs[0], refs[1:]) if gained else (None, refs)
     i = pl.program_id(0)
     K, B = q_ref.shape
     scale = _tile_scale_cols(scale_ref, i, K, B, qblock, aligned)
     dq = q_ref[...].astype(jnp.float32) * scale
-    part = jnp.sum(dq * w_ref[...].astype(jnp.float32), axis=0)
+    part = jnp.sum(dq * _row_coeff(w_ref, g_ref), axis=0)
     o_ref[...] = acc_ref[...] + part.reshape(o_ref.shape)
 
 
-def _fold_superpose_int4_kernel(scale_ref, w_ref, p_ref, acc_ref, o_ref, *,
-                                qblock=0, aligned=False):
+def _fold_superpose_int4_kernel(scale_ref, w_ref, *refs, qblock=0,
+                                aligned=False, gained=False):
     """int4 fold variant: in-VMEM nibble unpack, then fold into acc."""
+    g_ref, (p_ref, acc_ref, o_ref) = \
+        (refs[0], refs[1:]) if gained else (None, refs)
     i = pl.program_id(0)
     q = _unpack_nibbles(p_ref[...])
     K, B = q.shape
     scale = _tile_scale_cols(scale_ref, i, K, B, qblock, aligned)
     dq = q.astype(jnp.float32) * scale
-    part = jnp.sum(dq * w_ref[...].astype(jnp.float32), axis=0)
+    part = jnp.sum(dq * _row_coeff(w_ref, g_ref), axis=0)
     o_ref[...] = acc_ref[...] + part.reshape(o_ref.shape)
 
 
@@ -256,7 +285,7 @@ def _packed_specs(q, scale, *, qblock, packed4):
 
 
 def ota_packed_2d(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
-                  qblock: int = 0, packed4: bool = False,
+                  gains=None, qblock: int = 0, packed4: bool = False,
                   interpret: bool = False):
     """Dequant + weighted superpose of quantized client rows.
 
@@ -265,29 +294,38 @@ def ota_packed_2d(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
     (K, 1) per-update scales, or the (K, n_blocks) blockwise scale
     matrix with ``qblock`` symbols per block (``core/quant.
     quantize_row_sr`` with block = qblock; last block ragged). w: (K,).
-    Returns the (M,) f32 partial aggregate for this storage group; the
-    caller combines groups and computes the AWGN power on the total
-    (see core/ota.py).
+    ``gains``: optional (K,) per-row effective channel gain (DESIGN.md
+    §12) — the fading/power-control receive gain multiplying each row's
+    combining weight in-pass; None (the default) is the unit channel
+    and runs the exact legacy program (no extra kernel input). Returns
+    the (M,) f32 partial aggregate for this storage group; the caller
+    combines groups and computes the AWGN power on the total (see
+    core/ota.py).
     """
     K = q.shape[0]
     M, grid, aligned, scales, smat, col, tile = _packed_specs(
         q, scale, qblock=qblock, packed4=packed4)
     body = _dq_superpose_int4_kernel if packed4 else _dq_superpose_kernel
+    gained = gains is not None
+    in_specs = [smat, col] + ([col] if gained else []) + [tile]
+    operands = [scales, w.reshape(K, 1).astype(jnp.float32)]
+    if gained:
+        operands.append(jnp.asarray(gains).reshape(K, 1).astype(jnp.float32))
+    operands.append(q)
     return pl.pallas_call(
-        functools.partial(body, qblock=qblock, aligned=aligned),
+        functools.partial(body, qblock=qblock, aligned=aligned,
+                          gained=gained),
         grid=grid,
-        in_specs=[smat, col, tile],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((BLOCK_COLS,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((M,), jnp.float32),
         interpret=interpret,
-    )(scales,
-      w.reshape(K, 1).astype(jnp.float32),
-      q)
+    )(*operands)
 
 
 def ota_fold_2d(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
-                w: jnp.ndarray, *, qblock: int = 0, packed4: bool = False,
-                interpret: bool = False):
+                w: jnp.ndarray, *, gains=None, qblock: int = 0,
+                packed4: bool = False, interpret: bool = False):
     """Fold one packed micro-batch into a persistent (M,) accumulator.
 
     Same contract as ``ota_packed_2d`` plus ``acc``: the running
@@ -295,8 +333,9 @@ def ota_fold_2d(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
     acc + the micro-batch's partial aggregate — the streaming-round
     primitive (DESIGN.md §11): arrivals fold in batch by batch instead
     of one (K, M) barrier, and HBM traffic per fold is one read of the
-    batch symbols + one read/write of the accumulator. Oracle:
-    ``ref.ota_fold_ref`` (bit-equal).
+    batch symbols + one read/write of the accumulator. ``gains``: the
+    optional per-row channel gain column as in ``ota_packed_2d``.
+    Oracle: ``ref.ota_fold_ref`` (bit-equal).
     """
     K = q.shape[0]
     M, grid, aligned, scales, smat, col, tile = _packed_specs(
@@ -304,18 +343,22 @@ def ota_fold_2d(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
     assert acc.shape == (M,), (acc.shape, M)
     body = (_fold_superpose_int4_kernel if packed4
             else _fold_superpose_kernel)
+    gained = gains is not None
     acc_spec = pl.BlockSpec((BLOCK_COLS,), lambda i: (i,))
+    in_specs = [smat, col] + ([col] if gained else []) + [tile, acc_spec]
+    operands = [scales, w.reshape(K, 1).astype(jnp.float32)]
+    if gained:
+        operands.append(jnp.asarray(gains).reshape(K, 1).astype(jnp.float32))
+    operands.extend([q, acc.astype(jnp.float32)])
     return pl.pallas_call(
-        functools.partial(body, qblock=qblock, aligned=aligned),
+        functools.partial(body, qblock=qblock, aligned=aligned,
+                          gained=gained),
         grid=grid,
-        in_specs=[smat, col, tile, acc_spec],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((BLOCK_COLS,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((M,), jnp.float32),
         interpret=interpret,
-    )(scales,
-      w.reshape(K, 1).astype(jnp.float32),
-      q,
-      acc.astype(jnp.float32))
+    )(*operands)
 
 
 def ota_fused_2d(x: jnp.ndarray, scale: jnp.ndarray, qmax: jnp.ndarray,

@@ -61,7 +61,8 @@ def ota_fused_ref(x: jnp.ndarray, scale: jnp.ndarray, qmax: jnp.ndarray,
 
 
 def ota_packed_ref(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
-                   qblock: int = 0, packed4: bool = False) -> jnp.ndarray:
+                   gains: Optional[jnp.ndarray] = None, qblock: int = 0,
+                   packed4: bool = False) -> jnp.ndarray:
     """Oracle for the packed-uplink dequant+superpose kernel
     (``ota_fused.ota_packed_2d``).
 
@@ -69,10 +70,15 @@ def ota_packed_ref(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
     nibbles when ``packed4``. scale: (K,)/(K, 1) per-update scales, or
     the (K, n_blocks) blockwise scale matrix — symbol position p
     dequantizes with block p // qblock (``qblock`` = 0 or n_blocks = 1:
-    one scale per update, the PR-2 format). w: (K,). Returns the (M,)
-    f32 partial aggregate sum_k w_k * scale_k[block] * q_k. Uses the
-    same nibble unpack and per-column scale gather as the kernel body so
-    the two are bit-equal per storage group.
+    one scale per update, the PR-2 format). w: (K,). ``gains``: optional
+    (K,) effective channel gain per row (DESIGN.md §12) — the combining
+    coefficient becomes w_k * g_k, multiplied out BEFORE the symbol
+    math exactly as the kernel's ``_row_coeff`` does, so kernel and
+    oracle stay bit-equal with and without gains (None skips the
+    multiply entirely: the legacy program). Returns the (M,) f32
+    partial aggregate sum_k w_k [* g_k] * scale_k[block] * q_k. Uses
+    the same nibble unpack and per-column scale gather as the kernel
+    body so the two are bit-equal per storage group.
     """
     if packed4:
         from repro.kernels.ota_fused import _unpack_nibbles
@@ -88,23 +94,28 @@ def ota_packed_ref(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
     else:
         scale_cols = scales  # (K, 1) broadcast
     dq = q.astype(jnp.float32) * scale_cols
-    return jnp.sum(dq * w.reshape(-1, 1).astype(jnp.float32), axis=0)
+    wcol = w.reshape(-1, 1).astype(jnp.float32)
+    if gains is not None:
+        wcol = wcol * jnp.asarray(gains).reshape(-1, 1).astype(jnp.float32)
+    return jnp.sum(dq * wcol, axis=0)
 
 
 def ota_fold_ref(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
-                 w: jnp.ndarray, *, qblock: int = 0,
-                 packed4: bool = False) -> jnp.ndarray:
+                 w: jnp.ndarray, *, gains: Optional[jnp.ndarray] = None,
+                 qblock: int = 0, packed4: bool = False) -> jnp.ndarray:
     """Oracle for the streaming fold kernel (``ota_fused.ota_fold_2d``).
 
     acc: the running (M,) f32 superposition state; remaining args as in
-    ``ota_packed_ref``. Returns acc + sum_k w_k * scale_k[block] * q_k —
-    the per-column math of the barrier oracle plus one elementwise add,
+    ``ota_packed_ref`` (incl. the optional per-row channel ``gains``).
+    Returns acc + sum_k w_k [* g_k] * scale_k[block] * q_k — the
+    per-column math of the barrier oracle plus one elementwise add,
     so kernel and oracle are bit-equal and fold(zeros, batch) equals
     ``ota_packed_ref(batch)`` (the persistent-accumulator contract,
-    DESIGN.md §11).
+    DESIGN.md §11). A wave whose gains are all zero adds exact zeros:
+    the accumulator value is unchanged.
     """
     return acc.astype(jnp.float32) + ota_packed_ref(
-        q, scale, w, qblock=qblock, packed4=packed4)
+        q, scale, w, gains=gains, qblock=qblock, packed4=packed4)
 
 
 def ota_aggregate_ref(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
