@@ -30,9 +30,11 @@ single per-update scale inflates every low-bit client's integer grid.
 Usage:  python benchmarks/bench_aggregation.py [--full] [--csv] [--smoke]
 ``--full`` extends the sweep to M = 10M+ parameter models. ``--smoke``
 is the CI mode (scripts/tier1.sh): one tiny config, asserts the 4-bit
-wire-byte bar (at the default quantization block), packed-vs-f32
-aggregate equivalence, and blockwise MSE <= per-row MSE on the
-heavy-tailed fixture; exits non-zero on violation. Runnable standalone
+wire-byte bar (at the default quantization block), the round-trip
+(uplink + downlink) wire bar — 4-bit up / 8-bit down must come in at
+<= 1/4 of f32 on both legs — packed-vs-f32 aggregate equivalence, and
+blockwise MSE <= per-row MSE on the heavy-tailed fixture; exits
+non-zero on violation. Runnable standalone
 (no PYTHONPATH needed — it self-locates ``src/``) or via
 scripts/tier1.sh.
 """
@@ -53,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ota, packing
+from repro.core import ota, packing, wire
 
 # K sweep at fixed M, then M sweep at fixed K. (K, M) pairs.
 QUICK_SWEEP = [
@@ -213,6 +215,44 @@ def quant_error_report(M: int = 1 << 16,
     return out
 
 
+def bench_roundtrip(K: int = 4, M: int = 1 << 14,
+                    up_bits: int = 4, down_bits: int = 8,
+                    block: int = packing.QUANT_BLOCK) -> dict:
+    """Round-trip (uplink + downlink) wire bytes vs f32 on both legs.
+
+    The symmetric-codec measurement (DESIGN.md §13): the cohort's K
+    quantized uplink rows PLUS the server's one quantized broadcast row,
+    against K + 1 f32 rows. At 4-bit up / 8-bit down with blockwise
+    scales the ratio lands at ~(K/8 + 1/4)/(K + 1) ~ 0.15 and must stay
+    <= 1/4 (smoke acceptance bar). An f32-passthrough downlink
+    (``down_bits`` >= 32) is also measured: its broadcast must occupy
+    exactly the 4 * padded_size bytes of the legacy uncoded broadcast.
+    """
+    ups = [_tree_of(M, seed=i) for i in range(K)]
+    layout = packing.make_layout(ups[0])
+    X = packing.pack_batch(ups, layout)
+    key = jax.random.key(5)
+    rows = _make_rows(X, [up_bits] * K, key, block=block)
+    up = wire.wire_bytes(rows)
+    # downlink: the aggregated delta, encoded once with the downlink seed
+    delta = jnp.mean(X, axis=0)
+    dl_seed = ota.derive_dl_seed(key)
+    down = wire.encode_row(delta, down_bits, dl_seed, 0, block=block)
+    down_f32 = wire.encode_row(delta, 32, dl_seed, 0, block=block)
+    f32_leg = 4 * layout.padded_size
+    ratio = (up + down.wire_nbytes) / (f32_leg * (K + 1))
+    print(f"round-trip (K={K}, M={M}, {up_bits}-bit up / {down_bits}-bit "
+          f"down, block={block}): {up} up + {down.wire_nbytes} down bytes "
+          f"vs {f32_leg * (K + 1)} f32 -> ratio {ratio:.4f} (bar: <= 0.25)")
+    return {
+        "uplink_bytes": up,
+        "downlink_bytes": down.wire_nbytes,
+        "downlink_bytes_f32": down_f32.wire_nbytes,
+        "f32_leg_bytes": f32_leg,
+        "roundtrip_ratio": ratio,
+    }
+
+
 def smoke() -> int:
     """CI mode: tiny config, hard-asserted acceptance checks (~seconds)."""
     K, M = 6, 1 << 14
@@ -240,6 +280,11 @@ def smoke() -> int:
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     ratio = bench_4bit_wire(K=4, M=M, block=packing.QUANT_BLOCK)
     assert ratio <= 1 / 7, f"4-bit wire ratio {ratio} above 1/7"
+    rt = bench_roundtrip(K=4, M=M)
+    assert rt["roundtrip_ratio"] <= 0.25, \
+        f"round-trip wire ratio {rt['roundtrip_ratio']} above 1/4"
+    assert rt["downlink_bytes_f32"] == rt["f32_leg_bytes"], \
+        "f32 passthrough downlink must occupy exactly the uncoded bytes"
     errs = quant_error_report(M=M)
     for b, (e_per, e_blk) in errs.items():
         assert e_blk <= e_per, \
@@ -247,22 +292,27 @@ def smoke() -> int:
     print(f"smoke OK: packed == f32 aggregate, blockwise kernel == oracle "
           f"(K={K}, M={M}); mixed-cohort wire bytes "
           f"{info['uplink_bytes']}/{info['uplink_bytes_f32']} per-row, "
-          f"{binfo['uplink_bytes']} blockwise")
+          f"{binfo['uplink_bytes']} blockwise; round-trip ratio "
+          f"{rt['roundtrip_ratio']:.3f}")
     return 0
 
 
 def json_report() -> dict:
     """Machine-readable smoke-scale numbers (benchmarks/run.py --json)."""
     K, M = 6, 1 << 14
-    legacy_s, flat_s, packed_s, wire, speed = bench_pair(K, M, reps=2)
+    legacy_s, flat_s, packed_s, wire_r, speed = bench_pair(K, M, reps=2)
     ratio = bench_4bit_wire(K=4, M=M, block=packing.QUANT_BLOCK)
+    rt = bench_roundtrip(K=4, M=M)
     errs = quant_error_report(M=M)
     return {
         "K": K, "M": M,
         "legacy_ms": legacy_s * 1e3, "flat_ms": flat_s * 1e3,
         "packed_ms": packed_s * 1e3, "speedup": speed,
-        "mixed_cohort_wire_ratio": wire,
+        "mixed_cohort_wire_ratio": wire_r,
         "int4_wire_ratio": ratio, "int4_wire_bar": 1 / 7,
+        "roundtrip_ratio": rt["roundtrip_ratio"],
+        "roundtrip_bar": 0.25,
+        "roundtrip_downlink_bytes": rt["downlink_bytes"],
         "quant_mse": {str(b): {"per_row": e[0], "blockwise": e[1]}
                       for b, e in errs.items()},
     }

@@ -1,2 +1,5 @@
-from repro.ckpt.checkpoint import (CheckpointManager,  # noqa: F401
-                                   load_checkpoint, save_checkpoint)
+from repro.ckpt.checkpoint import (  # noqa: F401
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)

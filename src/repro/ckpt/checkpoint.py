@@ -11,10 +11,18 @@ fall back to stdlib zlib, so checkpointing works on a bare environment.
 Legacy flag-less files (raw zstd frames, magic ``0x28 B5 2F FD``) are
 still readable when zstandard is installed.
 
+bf16 leaves are stored natively as their raw 2-byte payload (uint16
+view, tag ``bf16n``) — half the bytes of the legacy ``bf16`` tag, which
+widened to f32 on disk; both tags restore to bf16 bit-for-bit. This is
+what keeps quantized optimizer state (DESIGN.md §13: bf16 moments,
+int8 second moments) compressed *through* the checkpoint, not just in
+memory.
+
 Restore accepts an optional target sharding tree: each leaf is
 ``jax.device_put`` to its NamedSharding so a multi-host/multi-device
 restore lands sharded without a host-memory spike per device.
 """
+
 from __future__ import annotations
 
 import os
@@ -56,7 +64,8 @@ def _decompress(blob: bytes) -> bytes:
         if zstandard is None:
             raise RuntimeError(
                 "checkpoint was written with zstandard, which is not "
-                "installed; pip install zstandard to read it")
+                "installed; pip install zstandard to read it"
+            )
         data = payload if flag == _FLAG_ZSTD else blob
         return zstandard.ZstdDecompressor().decompress(data)
     raise ValueError(f"unrecognised checkpoint codec flag {flag!r}")
@@ -70,19 +79,22 @@ def _pack_tree(tree: Pytree):
         if isinstance(node, dict):
             return {"t": "d", "v": {k: encode_structure(v) for k, v in node.items()}}
         if isinstance(node, (list, tuple)):
-            return {"t": "l" if isinstance(node, list) else "t",
-                    "v": [encode_structure(v) for v in node]}
+            return {
+                "t": "l" if isinstance(node, list) else "t",
+                "v": [encode_structure(v) for v in node],
+            }
         return {"t": _LEAF, "v": int(node)}
 
     enc_leaves = []
     for leaf in leaves:
         arr = np.asarray(leaf)
-        enc_leaves.append({
-            "dtype": arr.dtype.str if arr.dtype != jnp.bfloat16 else "bf16",
-            "shape": list(arr.shape),
-            "data": (arr.astype(np.float32).tobytes()
-                     if arr.dtype == jnp.bfloat16 else arr.tobytes()),
-        })
+        if arr.dtype == jnp.bfloat16:
+            # native 2-byte storage: the uint16 bit pattern IS the bf16
+            enc = {"dtype": "bf16n", "data": arr.view(np.uint16).tobytes()}
+        else:
+            enc = {"dtype": arr.dtype.str, "data": arr.tobytes()}
+        enc["shape"] = list(arr.shape)
+        enc_leaves.append(enc)
     return encode_structure(structure), enc_leaves
 
 
@@ -95,7 +107,10 @@ def _unpack_tree(structure, leaves):
             seq = [decode(v) for v in node["v"]]
             return seq if t == "l" else tuple(seq)
         enc = leaves[node["v"]]
-        if enc["dtype"] == "bf16":
+        if enc["dtype"] == "bf16n":
+            arr = np.frombuffer(enc["data"], np.uint16).reshape(enc["shape"])
+            return jnp.asarray(arr.view(np.dtype(jnp.bfloat16)))
+        if enc["dtype"] == "bf16":  # legacy: bf16 widened to f32 bytes
             arr = np.frombuffer(enc["data"], np.float32).reshape(enc["shape"])
             return jnp.asarray(arr, jnp.bfloat16)
         arr = np.frombuffer(enc["data"], np.dtype(enc["dtype"]))
@@ -104,12 +119,17 @@ def _unpack_tree(structure, leaves):
     return decode(structure)
 
 
-def save_checkpoint(path: str, tree: Pytree,
-                    meta: Optional[Dict[str, Any]] = None,
-                    level: int = 3) -> None:
+def save_checkpoint(
+    path: str,
+    tree: Pytree,
+    meta: Optional[Dict[str, Any]] = None,
+    level: int = 3,
+) -> None:
     structure, leaves = _pack_tree(tree)
-    doc = msgpack.packb({"tree": structure, "leaves": leaves,
-                         "meta": meta or {}}, use_bin_type=True)
+    doc = msgpack.packb(
+        {"tree": structure, "leaves": leaves, "meta": meta or {}},
+        use_bin_type=True,
+    )
     comp = _compress(doc, level)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     # atomic write
@@ -131,7 +151,8 @@ def load_checkpoint(path: str, shardings: Optional[Pytree] = None):
     tree = _unpack_tree(doc["tree"], doc["leaves"])
     if shardings is not None:
         tree = jax.tree.map(
-            lambda x, s: jax.device_put(jnp.asarray(x), s), tree, shardings)
+            lambda x, s: jax.device_put(jnp.asarray(x), s), tree, shardings
+        )
     else:
         tree = jax.tree.map(jnp.asarray, tree)
     return tree, doc["meta"]

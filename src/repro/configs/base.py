@@ -245,10 +245,19 @@ class FLConfig:
     fade_threshold: float = 0.1   # |h|^2 truncation threshold
     tx_power_budget: float = 100.0  # per-client max transmit power P
     pathloss_spread_db: float = 0.0  # log-normal shadowing std (dB)
+    # compressed downlink broadcast (core/wire.py, DESIGN.md §13):
+    # bits >= 32 is the f32 passthrough — byte-identical to the legacy
+    # uncompressed broadcast; below that the server quantizes the round's
+    # global delta once (blockwise scales every ``downlink_block``
+    # symbols) and every client reconstructs bit-identical params.
+    downlink_bits: int = 32
+    downlink_block: int = QUANT_BLOCK
     # robustness options
     dropout_prob: float = 0.0   # straggler/device dropout per round
     fedprox_mu: float = 0.0     # proximal term pulling local weights to global
     server_momentum: float = 0.0  # FedAvgM velocity on the aggregated update
+    # store the FedAvgM velocity bf16 (0.5x resident bytes; DESIGN.md §13)
+    quantize_server_state: bool = False
     # paper Table II category mixture
     categories: Tuple[str, ...] = (
         "entertainment",

@@ -1,1 +1,1 @@
-from repro.core import channel, ota, quant  # noqa: F401
+from repro.core import channel, ota, quant, wire  # noqa: F401

@@ -77,8 +77,10 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from collections.abc import Mapping
+
 from repro.core import channel as chan
-from repro.core import packing, quant
+from repro.core import packing, quant, wire
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
@@ -145,6 +147,22 @@ def derive_sr_seed(key) -> jnp.ndarray:
     return jax.random.bits(k_quant, (), jnp.uint32)
 
 
+def derive_dl_seed(key) -> jnp.ndarray:
+    """The round's *downlink* dither seed (DESIGN.md §13).
+
+    The server stochastic-quantizes the global param delta exactly once
+    per round with this seed (``wire.encode_row`` at row 0) before
+    broadcasting; decoding is deterministic, so every client reconstructs
+    bit-identical params from the one encoded row. Derived from the same
+    quantization key split as ``derive_sr_seed`` but folded with a
+    downlink tag, so the two legs' dither streams are disjoint — a
+    client's uplink symbols and the broadcast it just received never
+    share rounding draws.
+    """
+    _, k_quant, _ = jax.random.split(key, 3)
+    return jax.random.bits(jax.random.fold_in(k_quant, 0xD0_4B17), (), jnp.uint32)
+
+
 def quantize_uplink(
     row: jnp.ndarray,
     bits: int,
@@ -155,47 +173,28 @@ def quantize_uplink(
 ) -> packing.PackedRow:
     """Modulate one client's flat packed row onto the wire (DESIGN.md §6).
 
-    Stochastic-quantizes ``row`` at ``bits`` using the round dither stream
-    (``derive_sr_seed``; ``row_index`` = the client's row in this round's
-    cohort, counting reporting clients only) and bit-packs the symbols:
-    two per byte for 4-bit clients, int8/int16 above, f32 passthrough for
-    unquantized clients. ``block`` > 0 ships blockwise scales — one f32
-    per ``block`` symbols (``packing.QUANT_BLOCK`` is the FL default;
-    +4 bytes/block on the wire) instead of one per update, so a single
-    outlier leaf no longer inflates the whole row's integer grid; 0
-    keeps the PR-2 per-update scale. The server dequantizes inside the
-    fused aggregation pass — the f32 row never crosses the uplink.
+    Thin alias for ``wire.encode_row`` — the symmetric codec facade both
+    legs share (DESIGN.md §13) — kept for the established uplink call
+    sites and tests. ``row_index`` = the client's row in this round's
+    cohort (reporting clients only), dithering off ``derive_sr_seed``'s
+    stream; ``block`` > 0 ships blockwise scales (``packing.QUANT_BLOCK``
+    is the FL default). The server dequantizes inside the fused
+    aggregation pass — the f32 row never crosses the uplink.
     """
-    q, scale = quant.quantize_row_sr(row, bits, sr_seed, row_index, block=block)
-    if packing.wire_kind(bits) == "int4":
-        q = kops.pack_int4_rows(q)
-    qblock = block if int(jnp.asarray(scale).size) > 1 else 0
-    return packing.PackedRow(data=q, scale=scale, bits=int(bits), qblock=qblock)
+    return wire.encode_row(row, bits, sr_seed, row_index, block=block)
 
 
 def dequantize_uplink(row: packing.PackedRow, n: Optional[int] = None) -> jnp.ndarray:
     """Reconstruct the f32 row a ``PackedRow`` encodes (q * scale[block]).
 
-    The simulator's data plane never does this — dequantization lives
-    inside the fused pass — but the quantization-*error* measurements
+    Thin alias for ``wire.decode_row``. The uplink data plane never does
+    this on the host — dequantization lives inside the fused pass — but
+    the quantization-*error* measurements
     (``benchmarks/bench_aggregation.py``) and the blockwise edge tests
     need the reconstruction standalone. ``n`` trims to the logical
     (unpadded) length.
     """
-    if row.kind == "float32":
-        out = jnp.asarray(row.data, jnp.float32)
-        return out if n is None else out[:n]
-    q = row.data
-    if row.kind == "int4":
-        q = kops.unpack_int4_rows(q)
-    q = q.astype(jnp.float32)
-    scales = jnp.atleast_1d(jnp.asarray(row.scale, jnp.float32))
-    if row.qblock > 0 and scales.shape[0] > 1:
-        bid = jnp.arange(q.shape[0], dtype=jnp.int32) // row.qblock
-        out = q * jnp.take(scales, bid, mode="clip")
-    else:
-        out = q * scales[0]
-    return out if n is None else out[:n]
+    return wire.decode_row(row, n)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n_valid", "use_kernel"))
@@ -501,35 +500,78 @@ class OtaAccumulator:
         self.wire_bytes += int(sum(r.wire_nbytes for r in rows))
         return self
 
-    def finalize(self, key) -> Tuple[Pytree, Dict[str, Any]]:
+    def finalize(self, key) -> Tuple[Pytree, "AggregateInfo"]:
         """AWGN epilogue on the accumulated superposition.
 
         Same key-split, noise draw, and norm calibration as the one-shot
         paths (``_awgn_epilogue``). Returns (update pytree with f32
-        leaves, info dict); the accumulator stays intact — call
+        leaves, ``AggregateInfo``); the accumulator stays intact — call
         ``reset`` to start the next round.
         """
         assert self._acc is not None, "finalize() before any fold()"
         y, noise_std = _awgn_epilogue(
             key, self._acc, cfg=self.cfg, n_valid=self.layout.size
         )
-        info = {
-            "noise_std": float(noise_std),
-            "n_folded": self.n_folded,
-            "uplink_bytes": self.wire_bytes,
-            "uplink_bytes_f32": 4 * self.layout.padded_size * self.n_folded,
-        }
+        info = AggregateInfo(
+            noise_std=float(noise_std),
+            n_folded=self.n_folded,
+            uplink_bytes=self.wire_bytes,
+            uplink_bytes_f32=4 * self.layout.padded_size * self.n_folded,
+        )
         return packing.unpack(y, self.layout, cast=False), info
 
 
-def _info_dict(habs, participate, noise_std) -> Dict[str, Any]:
+@dataclasses.dataclass
+class AggregateInfo(Mapping):
+    """Typed per-aggregation report (PR 8; previously an untyped dict).
+
+    One class serves every aggregation entry point — the one-shot paths
+    (``ota_aggregate_packed`` / ``ota_aggregate_flat`` callers), the
+    streaming ``OtaAccumulator.finalize``, and the per-tree oracle —
+    with fields a given path doesn't produce left ``None``. It
+    implements the ``Mapping`` protocol over its *present* (non-None)
+    fields, so the established ``info["uplink_bytes"]`` /
+    ``"n_truncated" in info`` call sites and tests keep working
+    unchanged; new code should prefer the attributes.
+    """
+
+    noise_std: float
+    n_participating: Optional[int] = None
+    participation: Optional[list] = None
+    channel_abs: Optional[list] = None  # legacy coin-flip channel |h| draws
+    channel_gains: Optional[list] = None  # physical-channel effective gains
+    n_truncated: Optional[int] = None
+    n_folded: Optional[int] = None  # streaming accumulator rows folded
+    uplink_bytes: Optional[int] = None
+    uplink_bytes_f32: Optional[int] = None
+    downlink_bytes: Optional[int] = None  # filled by the FL round loop
+
+    def _present(self) -> Dict[str, Any]:
+        return {
+            f.name: getattr(self, f.name)
+            for f in dataclasses.fields(self)
+            if getattr(self, f.name) is not None
+        }
+
+    def __getitem__(self, key: str) -> Any:
+        return self._present()[key]
+
+    def __iter__(self):
+        return iter(self._present())
+
+    def __len__(self) -> int:
+        return len(self._present())
+
+
+def _info(habs, participate, noise_std, **kw) -> AggregateInfo:
     participate = jax.device_get(participate)
-    return {
-        "participation": [bool(p) for p in participate],
-        "n_participating": int(participate.sum()),
-        "noise_std": float(noise_std),
-        "channel_abs": [float(h) for h in jax.device_get(habs)],
-    }
+    return AggregateInfo(
+        noise_std=float(noise_std),
+        n_participating=int(participate.sum()),
+        participation=[bool(p) for p in participate],
+        channel_abs=[float(h) for h in jax.device_get(habs)],
+        **kw,
+    )
 
 
 def ota_aggregate_packed(
@@ -542,7 +584,7 @@ def ota_aggregate_packed(
     *,
     gains=None,
     use_kernel: Optional[bool] = None,
-) -> Tuple[Pytree, Dict[str, Any]]:
+) -> Tuple[Pytree, "AggregateInfo"]:
     """Aggregate pre-packed client rows; unpack the result per ``layout``.
 
     The entry point for callers that already hold flat updates (the FL
@@ -583,19 +625,22 @@ def ota_aggregate_packed(
             n_valid=layout.size,
             use_kernel=use_kernel,
         )
+        wire_kw = dict(
+            uplink_bytes=wire.wire_bytes(rows),
+            uplink_bytes_f32=4 * layout.padded_size * len(rows),
+        )
         if gains is None:
-            info = _info_dict(habs, participate, noise_std)
+            info = _info(habs, participate, noise_std, **wire_kw)
         else:
             participate = jax.device_get(participate)
-            info = {
-                "participation": [bool(p) for p in participate],
-                "n_participating": int(participate.sum()),
-                "n_truncated": int((~participate).sum()),
-                "noise_std": float(noise_std),
-                "channel_gains": [float(g) for g in jax.device_get(gains)],
-            }
-        info["uplink_bytes"] = int(sum(r.wire_nbytes for r in rows))
-        info["uplink_bytes_f32"] = 4 * layout.padded_size * len(rows)
+            info = AggregateInfo(
+                noise_std=float(noise_std),
+                n_participating=int(participate.sum()),
+                participation=[bool(p) for p in participate],
+                n_truncated=int((~participate).sum()),
+                channel_gains=[float(g) for g in jax.device_get(gains)],
+                **wire_kw,
+            )
     else:
         assert gains is None, (
             "gains= is a packed-uplink feature (PackedRow cohorts only)"
@@ -609,7 +654,7 @@ def ota_aggregate_packed(
             n_valid=layout.size,
             use_kernel=use_kernel,
         )
-        info = _info_dict(habs, participate, noise_std)
+        info = _info(habs, participate, noise_std)
     agg = packing.unpack(y, layout, cast=False)
     return agg, info
 
@@ -623,7 +668,7 @@ def ota_aggregate(
     *,
     layout: Optional[packing.Layout] = None,
     use_kernel: Optional[bool] = None,
-) -> Tuple[Pytree, Dict[str, Any]]:
+) -> Tuple[Pytree, "AggregateInfo"]:
     """Aggregate client update pytrees over the simulated OTA channel.
 
     updates: per-client pytrees (same structure). bits: per-client precision.
@@ -657,7 +702,7 @@ def ota_aggregate_pertree(
     bits: Sequence[int],
     weights: Sequence[float],
     cfg: OTAConfig = OTAConfig(),
-) -> Tuple[Pytree, Dict[str, Any]]:
+) -> Tuple[Pytree, "AggregateInfo"]:
     """Reference oracle: the legacy per-client/per-leaf Python loop.
 
     Semantically identical to the flat path — same stochastic-rounding
@@ -715,7 +760,7 @@ def ota_aggregate_pertree(
         a + noise_std * jax.lax.slice_in_dim(n_full, off, off + size).reshape(a.shape)
         for a, off, size in zip(agg_leaves, layout.offsets, layout.sizes)
     ]
-    return jax.tree.unflatten(treedef, noisy), _info_dict(habs, participate, noise_std)
+    return jax.tree.unflatten(treedef, noisy), _info(habs, participate, noise_std)
 
 
 def channel_uses(

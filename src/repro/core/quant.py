@@ -142,6 +142,70 @@ def quantize_row_sr(
     return q.astype(_STORAGE_DTYPE[kind]), scale
 
 
+# ---------------------------------------------------------------------------
+# quantized optimizer/server state (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+# Symbols per scale for resident quantized state. Matches the wire/arena
+# default (``packing.QUANT_BLOCK`` / retrieval's int8 storage class): one
+# f32 scale per 256 values costs 1/64 of the int8 payload.
+STATE_BLOCK = 256
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block"))
+def quantize_state(x: jnp.ndarray, *, bits: int = 8, block: int = STATE_BLOCK):
+    """Blockwise symmetric quantization of one resident state tensor.
+
+    The storage class for server-side optimizer state (second moments,
+    EMAs): ``x`` is flattened, split into ``block``-value runs (last one
+    ragged), and each run is rounded-to-nearest onto the shared
+    amax/qmax grid — ``scale = max(amax, 1e-12) / qmax``, the same grid
+    ``quantize_row_sr`` and the retrieval arena use. Rounding is
+    deterministic (no dither): state is private to the server and
+    re-quantized every step, so the cross-client unbiasedness argument
+    that makes the *wire* stochastic does not apply here.
+
+    Returns (q, scale): q int8 in ``x``'s shape, scale (n_blocks,) f32
+    over the flattened order. ``block`` <= 0 or >= size degenerates to
+    one per-tensor scale (n_blocks = 1).
+    """
+    assert 2 <= bits <= 8, "int8 storage class: 2..8 bits"
+    x = jnp.asarray(x)
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    M = flat.shape[0]
+    qmax = jnp.float32(qrange(bits))
+    if 0 < block < M:
+        n_blocks = -(-M // block)
+        pad = n_blocks * block - M
+        padded = jnp.pad(flat, (0, pad)) if pad else flat
+        amax = jnp.max(jnp.abs(padded.reshape(n_blocks, block)), axis=1)
+        scale = jnp.maximum(amax, 1e-12) / qmax  # (n_blocks,)
+        cols = jnp.repeat(scale, block)[:M]
+    else:
+        amax = jnp.max(jnp.abs(flat))
+        scale = (jnp.maximum(amax, 1e-12) / qmax).reshape(1)
+        cols = scale[0]
+    q = jnp.clip(jnp.round(flat / cols), -qmax, qmax).astype(jnp.int8)
+    return q.reshape(shape), scale
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def dequantize_state(
+    q: jnp.ndarray, scale: jnp.ndarray, *, block: int = STATE_BLOCK
+) -> jnp.ndarray:
+    """Inverse of ``quantize_state``: q * scale[block], back in q's shape."""
+    shape = q.shape
+    flat = q.reshape(-1).astype(jnp.float32)
+    scale = jnp.atleast_1d(jnp.asarray(scale, jnp.float32))
+    if scale.shape[0] > 1:
+        bid = jnp.arange(flat.shape[0], dtype=jnp.int32) // block
+        flat = flat * jnp.take(scale, bid, mode="clip")
+    else:
+        flat = flat * scale[0]
+    return flat.reshape(shape)
+
+
 @jax.custom_vjp
 def ste_fake_quant(x: jnp.ndarray, bits: int) -> jnp.ndarray:
     """Fake-quant with straight-through gradients (for QAT local training)."""

@@ -8,9 +8,11 @@ already flat-packed (``core.packing``): the client is the one that
 modulates its update onto the analog symbol stream, so the pytree never
 crosses the client/server boundary and the server stacks rows straight
 into the (K, M) aggregation matrix. With the round's dither seed as well,
-the client also *quantizes and bit-packs* its row (``ota.quantize_uplink``
--> ``packing.PackedRow``): a 4-bit client's uplink is two symbols per
-byte + one f32 scale, 1/8 the f32 row (DESIGN.md §6).
+the client also *quantizes and bit-packs* its row through the symmetric
+wire codec (``wire.encode_row`` -> ``packing.PackedRow``): a 4-bit
+client's uplink is two symbols per byte + one f32 scale, 1/8 the f32 row
+(DESIGN.md §6). The same codec decodes the server's compressed downlink
+broadcast (``wire.decode_broadcast``, DESIGN.md §13).
 
 The module also hosts the seeded ``LatencyModel`` — per-client lognormal
 compute + uplink delay derived from the ``DeviceSpec`` — that gives every
@@ -194,9 +196,9 @@ class FLClient:
         if layout is not None:
             delta = packing.pack(delta, layout)
             if sr_seed is not None:
-                from repro.core import ota
+                from repro.core import wire
 
-                delta = ota.quantize_uplink(
+                delta = wire.encode_row(
                     delta, bits, sr_seed, uplink_row, block=quant_block
                 )
         metrics = {

@@ -31,7 +31,8 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, FLConfig, get_arch
 from repro.core import channel as chanmod
-from repro.core import ota, packing
+from repro.core import ota, packing, wire
+from repro.optim.optimizers import state_nbytes
 from repro.core.profiling.hardware import make_fleet
 from repro.core.profiling.planner import (
     BasePlanner,
@@ -100,12 +101,22 @@ def round_drift_rng(seed: int, rnd: int) -> random.Random:
 
 @dataclasses.dataclass
 class RoundLog:
+    """Typed per-round report (the round-loop side of ``ota.AggregateInfo``).
+
+    ``uplink_bytes``/``downlink_bytes`` are the round's two wire legs —
+    the cohort's packed uplink rows and the one broadcast row every
+    client receives (DESIGN.md §13) — so round-trip accounting reads
+    straight off the log.
+    """
+
     round: int
     bits: Dict[int, int]
     mean_satisfaction: float
     mean_energy: float
     n_participating: int
     train_loss: float
+    uplink_bytes: int = 0
+    downlink_bytes: int = 0
 
 
 class FLServer:
@@ -137,6 +148,18 @@ class FLServer:
         # one flat layout for the whole federation: clients pack their
         # deltas onto it, the OTA data plane aggregates rows (core/ota.py)
         self.layout = packing.make_layout(self.params)
+        # server-side flat state (DESIGN.md §13): ``_master`` is the f32
+        # optimizer-side params vector, ``_bcast`` the fleet's replica —
+        # what the clients reconstructed from the last downlink broadcast
+        # (== master under the f32 passthrough; under a quantized
+        # downlink, master - bcast is the residual the next broadcast
+        # re-sends: implicit error feedback). ``self.params`` is always
+        # the unpacked ``_bcast`` — server and clients train/evaluate on
+        # the same reconstruction.
+        self._master = packing.pack(self.params, self.layout)
+        self._bcast = self._master
+        self.last_broadcast: Optional[packing.PackedRow] = None
+        self.last_downlink_bytes = 0
         # physical OTA channel (DESIGN.md §12): None = legacy ideal path
         if fl_cfg.channel_model == "fading":
             self.channel: Optional[chanmod.ChannelModel] = chanmod.ChannelModel(
@@ -270,20 +293,59 @@ class FLServer:
             )
         return state
 
-    def _apply_update(self, agg: Pytree) -> None:
-        # server momentum (FedAvgM) on the aggregated update
+    def _apply_update(self, agg: Pytree, round_key) -> None:
+        """Server optimizer step + compressed downlink broadcast (§13).
+
+        FedAvgM momentum and the param update run on the flat f32 master
+        vector (same float ops, in the same order, as the pre-§13
+        per-leaf ``tree.map`` — packing is a concat). With
+        ``FLConfig.quantize_server_state`` the velocity is *stored* bf16
+        (0.5x f32 resident bytes) and dequantized to f32 for the math.
+
+        The broadcast then goes through the same wire codec as the
+        uplink (``core/wire.py``): f32 passthrough (``downlink_bits`` >=
+        32) ships the absolute params vector — byte-for-byte today's
+        broadcast, and the reconstruction is exactly the master; a
+        quantized downlink encodes the delta against the fleet's current
+        replica ONCE with the round's downlink dither seed
+        (``ota.derive_dl_seed``), and every client decodes the same row
+        to bit-identical params. The server adopts the reconstruction as
+        ``self.params``, so the quantization residual stays in
+        ``master - bcast`` and rides the next round's broadcast.
+        """
+        u = packing.pack(agg, self.layout)
         if self.cfg.server_momentum > 0.0:
             if not hasattr(self, "_velocity"):
-                self._velocity = jax.tree.map(
-                    lambda u: jnp.zeros_like(u, jnp.float32), agg
-                )
-            self._velocity = jax.tree.map(
-                lambda v, u: self.cfg.server_momentum * v + u, self._velocity, agg
+                self._velocity = jnp.zeros_like(u, jnp.float32)
+            v = self.cfg.server_momentum * self._velocity.astype(jnp.float32) + u
+            self._velocity = (
+                v.astype(jnp.bfloat16) if self.cfg.quantize_server_state else v
             )
-            agg = self._velocity
-        self.params = jax.tree.map(
-            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), self.params, agg
+            u = v
+        self._master = self._master + u
+
+        if packing.wire_kind(self.cfg.downlink_bits) == "float32":
+            payload = self._master  # absolute params: the passthrough oracle
+        else:
+            payload = self._master - self._bcast
+        row = wire.encode_row(
+            payload,
+            self.cfg.downlink_bits,
+            ota.derive_dl_seed(round_key),
+            0,
+            block=self.cfg.downlink_block,
         )
+        self._bcast = wire.decode_broadcast(row, self._bcast)
+        self.last_broadcast = row
+        self.last_downlink_bytes = row.wire_nbytes
+        self.params = packing.unpack(self._bcast, self.layout)
+
+    @property
+    def server_state_nbytes(self) -> int:
+        """Resident bytes of the server optimizer state (0 before any
+        momentum step; bf16 halves it under ``quantize_server_state``)."""
+        v = getattr(self, "_velocity", None)
+        return 0 if v is None else state_nbytes(v)
 
     def _observe_feedback(self, decisions, users, specs):
         # feedback: realised satisfaction -> RAG databases
@@ -334,7 +396,8 @@ class FLServer:
                 row_gains, jnp.float32),
         )
         self.last_uplink_bytes = info["uplink_bytes"]
-        self._apply_update(agg)
+        self._apply_update(agg, round_key)
+        info.downlink_bytes = self.last_downlink_bytes
         sats, energies = self._observe_feedback(decisions, users, specs)
 
         log = RoundLog(
@@ -344,6 +407,8 @@ class FLServer:
             mean_energy=float(np.mean(energies)),
             n_participating=info["n_participating"],
             train_loss=float(np.mean(losses)),
+            uplink_bytes=info["uplink_bytes"],
+            downlink_bytes=self.last_downlink_bytes,
         )
         self.round_logs.append(log)
         return log
@@ -633,7 +698,8 @@ class StreamingFLServer(FLServer):
             acc.fold([deltas[j] for j in counted], w, gains=g_counted)
         agg, info = acc.finalize(round_key)
         self.last_uplink_bytes = info["uplink_bytes"]
-        self._apply_update(agg)
+        self._apply_update(agg, round_key)
+        info.downlink_bytes = self.last_downlink_bytes
         sats, energies = self._observe_feedback(decisions, users, specs)
 
         log = StreamRoundLog(
@@ -643,6 +709,8 @@ class StreamingFLServer(FLServer):
             mean_energy=float(np.mean(energies)),
             n_participating=int(jax.device_get(participate).sum()),
             train_loss=float(np.mean([losses[j] for j in counted])),
+            uplink_bytes=info["uplink_bytes"],
+            downlink_bytes=self.last_downlink_bytes,
             sim_seconds=plan.t_close,
             n_on_time=len(plan.on_time),
             n_late=len(plan.late),

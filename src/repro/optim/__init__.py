@@ -1,4 +1,12 @@
 from repro.optim.optimizers import (  # noqa: F401
-    Optimizer, adam, adamw, sgd, momentum, clip_by_global_norm,
-    cosine_schedule, linear_warmup_cosine, constant_schedule,
+    Optimizer,
+    adam,
+    adamw,
+    clip_by_global_norm,
+    constant_schedule,
+    cosine_schedule,
+    linear_warmup_cosine,
+    momentum,
+    sgd,
+    state_nbytes,
 )

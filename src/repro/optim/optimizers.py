@@ -9,7 +9,21 @@ An ``Optimizer`` is an (init, update) pair over pytrees:
 All state lives in pytrees mirroring the params, so optimizer state
 shards exactly like the parameters under pjit (ZeRO-style for free when
 params are FSDP-sharded).
+
+Quantized resident state (DESIGN.md §13): at million-user FL scale and
+billion-parameter configs the f32 optimizer state is the dominant
+server-resident memory, so ``momentum``/``adam``/``adamw`` accept
+``quantize=True`` and then *store* their moments compressed — the first
+moment in bf16 (sign-magnitude structure survives the 8-bit mantissa),
+the second moment blockwise-int8 on ``core/quant``'s shared amax/qmax
+grid (``quant.quantize_state``) — stored in the sqrt domain with a
+half-step denominator floor; see ``_adam_impl``. Every ``update``
+dequantizes to f32,
+runs the standard math, and re-quantizes for storage, so the API and the
+returned updates' dtypes are unchanged; ``state_nbytes`` reports the
+resident footprint (bf16 m = 0.5x f32, int8 v ~ 0.27x).
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -17,6 +31,8 @@ from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import quant
 
 Pytree = Any
 Schedule = Callable[[jnp.ndarray], jnp.ndarray]
@@ -45,8 +61,9 @@ def cosine_schedule(lr: float, total_steps: int, min_frac: float = 0.1) -> Sched
     return fn
 
 
-def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
-                         min_frac: float = 0.1) -> Schedule:
+def linear_warmup_cosine(
+    lr: float, warmup: int, total_steps: int, min_frac: float = 0.1
+) -> Schedule:
     cos = cosine_schedule(lr, max(total_steps - warmup, 1), min_frac)
 
     def fn(step):
@@ -66,11 +83,57 @@ def _as_schedule(lr) -> Schedule:
 
 
 def clip_by_global_norm(grads: Pytree, max_norm: float) -> Tuple[Pytree, jnp.ndarray]:
-    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                        for g in jax.tree.leaves(grads)))
+    norm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
-    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
-                        grads), norm
+    return jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    ), norm
+
+
+# ---------------------------------------------------------------------------
+# quantized-state storage helpers (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def state_nbytes(state: Pytree) -> int:
+    """Resident bytes of an optimizer state pytree (leaf nbytes summed).
+
+    The acceptance metric for quantized server state: quantized adam
+    must come in <= 0.5x its f32 twin (bf16 m alone is exactly 0.5x;
+    blockwise-int8 v is ~0.27x including scales).
+    """
+    return int(
+        sum(l.size * jnp.dtype(l.dtype).itemsize for l in jax.tree.leaves(state))
+    )
+
+
+def _bf16_tree(tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda x: x.astype(jnp.bfloat16), tree)
+
+
+def _f32_tree(tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+
+
+def _quantize_tree(tree: Pytree) -> Tuple[Pytree, Pytree]:
+    """Per-leaf blockwise-int8 encode -> (q tree, scale tree)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    pairs = [quant.quantize_state(l) for l in leaves]
+    qs = jax.tree.unflatten(treedef, [q for q, _ in pairs])
+    scales = jax.tree.unflatten(treedef, [s for _, s in pairs])
+    return qs, scales
+
+
+def _dequantize_tree(qs: Pytree, scales: Pytree) -> Pytree:
+    return jax.tree.map(quant.dequantize_state, qs, scales)
+
+
+def _grid_half_step(scale: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Half the int8 grid step, broadcast to ``leaf``'s shape per block."""
+    cols = jnp.repeat(jnp.atleast_1d(scale), quant.STATE_BLOCK)[: leaf.size]
+    return (cols / 2).reshape(leaf.shape)
 
 
 # ---------------------------------------------------------------------------
@@ -91,56 +154,123 @@ def sgd(lr) -> Optimizer:
     return Optimizer(init, update)
 
 
-def momentum(lr, beta: float = 0.9) -> Optimizer:
+def momentum(lr, beta: float = 0.9, *, quantize: bool = False) -> Optimizer:
+    """Heavy-ball momentum; ``quantize=True`` stores the velocity bf16."""
     sched = _as_schedule(lr)
+    store_dtype = jnp.bfloat16 if quantize else jnp.float32
 
     def init(params):
-        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, store_dtype), params)}
 
     def update(grads, state, params, step):
-        m = jax.tree.map(lambda m_, g: beta * m_ + g.astype(jnp.float32),
-                         state["m"], grads)
+        m = jax.tree.map(
+            lambda m_, g: beta * m_.astype(jnp.float32) + g.astype(jnp.float32),
+            state["m"],
+            grads,
+        )
         lr_t = sched(step)
-        return jax.tree.map(lambda m_: -lr_t * m_, m), {"m": m}
+        store = _bf16_tree(m) if quantize else m
+        return jax.tree.map(lambda m_: -lr_t * m_, m), {"m": store}
 
     return Optimizer(init, update)
 
 
-def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
-    return _adam_impl(lr, b1, b2, eps, weight_decay=0.0)
+def adam(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    *,
+    quantize: bool = False,
+) -> Optimizer:
+    return _adam_impl(lr, b1, b2, eps, weight_decay=0.0, quantize=quantize)
 
 
-def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-          weight_decay: float = 0.01) -> Optimizer:
-    return _adam_impl(lr, b1, b2, eps, weight_decay=weight_decay)
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    *,
+    quantize: bool = False,
+) -> Optimizer:
+    return _adam_impl(lr, b1, b2, eps, weight_decay=weight_decay, quantize=quantize)
 
 
-def _adam_impl(lr, b1, b2, eps, weight_decay) -> Optimizer:
+def _adam_impl(lr, b1, b2, eps, weight_decay, quantize: bool = False) -> Optimizer:
+    """Adam/AdamW. ``quantize=True`` stores m bf16 and v blockwise-int8.
+
+    The second moment is stored in the SQRT domain — ``v_q`` holds
+    sqrt(v) on the int8 amax grid — and the update's denominator is
+    floored at the grid's half-step. Both are load-bearing: a linear
+    grid on v itself collapses small second moments in outlier-heavy
+    blocks to integer 0, and a zero denominator turns the next step into
+    mh/eps — a 10x-100x step explosion on exactly the coordinates that
+    were quiet. sqrt compresses the block's dynamic range (error is
+    linear in the *magnitude*, not the variance), and the half-step
+    floor bounds the amplification of whatever still rounds to zero by
+    the storage resolution itself. The moment recurrences and bias
+    correction are the standard math on the dequantized f32 values.
+    """
     sched = _as_schedule(lr)
 
     def init(params):
         def zeros(p):
             return jnp.zeros_like(p, jnp.float32)
-        return {"m": jax.tree.map(zeros, params),
-                "v": jax.tree.map(zeros, params)}
+
+        if not quantize:
+            return {
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+            }
+        v_q, v_scale = _quantize_tree(jax.tree.map(zeros, params))
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.bfloat16), params),
+            "v_q": v_q,
+            "v_scale": v_scale,
+        }
 
     def update(grads, state, params, step):
         t = step.astype(jnp.float32) + 1.0
-        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
-                         state["m"], grads)
+        if quantize:
+            m_prev = _f32_tree(state["m"])
+            r_prev = _dequantize_tree(state["v_q"], state["v_scale"])
+            v_prev = jax.tree.map(jnp.square, r_prev)
+        else:
+            m_prev, v_prev = state["m"], state["v"]
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), m_prev, grads
+        )
         v = jax.tree.map(
             lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-            state["v"], grads)
-        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
-        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+            v_prev,
+            grads,
+        )
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1**t), m)
         lr_t = sched(step)
+        bc2 = jnp.sqrt(1 - b2**t)
+        if quantize:
+            r = jax.tree.map(jnp.sqrt, v)
+            v_q, v_scale = _quantize_tree(r)
+            denom = jax.tree.map(
+                lambda r_, s: jnp.maximum(r_, _grid_half_step(s, r_)) / bc2 + eps,
+                r,
+                v_scale,
+            )
+        else:
+            # unchanged f32 ops: sqrt of the bias-corrected vh, then eps
+            denom = jax.tree.map(lambda v_: jnp.sqrt(v_ / (1 - b2**t)) + eps, v)
 
-        def upd(mh_, vh_, p):
-            u = -lr_t * mh_ / (jnp.sqrt(vh_) + eps)
+        def upd(mh_, d_, p):
+            u = -lr_t * mh_ / d_
             if weight_decay:
                 u = u - lr_t * weight_decay * p.astype(jnp.float32)
             return u
 
-        return jax.tree.map(upd, mh, vh, params), {"m": m, "v": v}
+        updates = jax.tree.map(upd, mh, denom, params)
+        if not quantize:
+            return updates, {"m": m, "v": v}
+        return updates, {"m": _bf16_tree(m), "v_q": v_q, "v_scale": v_scale}
 
     return Optimizer(init, update)

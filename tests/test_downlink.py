@@ -1,0 +1,332 @@
+"""Compressed downlink broadcast + quantized server state (DESIGN.md §13).
+
+Pins the symmetric-wire contract: the f32 passthrough downlink is
+byte-identical to the legacy uncompressed broadcast (the equivalence
+oracle), a quantized downlink reconstructs bit-identically across the
+whole fleet from one shared encoded row, the quantization residual rides
+the next broadcast (error feedback), and quantized optimizer state — bf16
+first moments, blockwise-int8 second moments — tracks f32 within the
+documented tolerances and survives a checkpoint round trip at its
+compressed size.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.base import FLConfig
+from repro.core import ota, packing, quant, wire
+from repro.fl.server import FLServer
+from repro.optim.optimizers import adam, momentum, state_nbytes
+
+
+def _fl_cfg(**kw):
+    base = dict(
+        n_clients=4,
+        clients_per_round=2,
+        n_rounds=2,
+        local_steps=1,
+        local_batch=2,
+        lr=1e-3,
+        planner="unified",
+        seed=0,
+    )
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _flat_params(srv):
+    return np.concatenate(
+        [np.asarray(l, np.float32).ravel() for l in jax.tree.leaves(srv.params)]
+    )
+
+
+# ---------------------------------------------------------------------------
+# codec determinism: one encoded row, a whole fleet of identical decodes
+# ---------------------------------------------------------------------------
+
+
+def test_decode_is_deterministic_across_decoders():
+    row_f32 = jnp.asarray(np.random.RandomState(0).randn(1000), jnp.float32)
+    seed = ota.derive_dl_seed(jax.random.key(3))
+    enc = wire.encode_row(row_f32, 8, seed, 0, block=64)
+    decodes = [np.asarray(wire.decode_row(enc)) for _ in range(4)]
+    for d in decodes[1:]:
+        np.testing.assert_array_equal(decodes[0], d)
+    # decoding a byte-copy of the row agrees too (what a client receives)
+    copy = packing.PackedRow(
+        data=jnp.asarray(np.asarray(enc.data).copy()),
+        scale=jnp.asarray(np.asarray(enc.scale).copy()),
+        bits=enc.bits,
+        qblock=enc.qblock,
+    )
+    np.testing.assert_array_equal(decodes[0], np.asarray(wire.decode_row(copy)))
+
+
+def test_encode_row_uses_disjoint_downlink_stream():
+    key = jax.random.key(9)
+    assert int(ota.derive_dl_seed(key)) != int(ota.derive_sr_seed(key))
+    row = jnp.asarray(np.random.RandomState(1).randn(512), jnp.float32)
+    up = wire.encode_row(row, 4, ota.derive_sr_seed(key), 0)
+    down = wire.encode_row(row, 4, ota.derive_dl_seed(key), 0)
+    assert not np.array_equal(np.asarray(up.data), np.asarray(down.data))
+
+
+def test_decode_broadcast_quantized_needs_base():
+    row = jnp.asarray(np.random.RandomState(2).randn(256), jnp.float32)
+    enc = wire.encode_row(row, 8, jnp.uint32(5), 0)
+    with pytest.raises(AssertionError):
+        wire.decode_broadcast(enc, None)
+    base = jnp.zeros(256, jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(wire.decode_broadcast(enc, base)),
+        np.asarray(wire.decode_row(enc)),
+    )
+
+
+def test_blockwise_downlink_mse_le_per_row():
+    rng = np.random.RandomState(3)
+    # heterogeneous magnitudes: the case blockwise scales exist for
+    row = jnp.asarray(
+        np.concatenate([rng.randn(512) * s for s in (1e-3, 1e-1, 10.0)]),
+        jnp.float32,
+    )
+    seed = jnp.uint32(11)
+    for bits in (4, 8):
+        per = wire.decode_row(wire.encode_row(row, bits, seed, 0))
+        blk = wire.decode_row(wire.encode_row(row, bits, seed, 0, block=256))
+        e_per = float(jnp.mean((per - row) ** 2))
+        e_blk = float(jnp.mean((blk - row) ** 2))
+        assert e_blk <= e_per, (bits, e_blk, e_per)
+
+
+# ---------------------------------------------------------------------------
+# f32 passthrough: byte-identical to the legacy uncompressed broadcast
+# ---------------------------------------------------------------------------
+
+
+class _LegacyServer(FLServer):
+    """Pre-§13 apply/broadcast: per-leaf tree.map, no wire codec."""
+
+    def _apply_update(self, agg, round_key):
+        if self.cfg.server_momentum > 0.0:
+            if not hasattr(self, "_legacy_velocity"):
+                self._legacy_velocity = jax.tree.map(
+                    lambda u: jnp.zeros_like(u, jnp.float32), agg
+                )
+            self._legacy_velocity = jax.tree.map(
+                lambda v, u: self.cfg.server_momentum * v + u,
+                self._legacy_velocity,
+                agg,
+            )
+            agg = self._legacy_velocity
+        self.params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            self.params,
+            agg,
+        )
+
+
+@pytest.mark.parametrize("server_momentum", [0.0, 0.9])
+def test_f32_passthrough_bit_identical_to_legacy(server_momentum):
+    cfg = _fl_cfg(server_momentum=server_momentum)
+    new = FLServer(cfg, shard_size=4)
+    old = _LegacyServer(cfg, shard_size=4)
+    for r in range(2):
+        new.run_round(r)
+        old.run_round(r)
+        for a, b in zip(jax.tree.leaves(new.params), jax.tree.leaves(old.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the broadcast row IS the uncoded f32 params: exactly 4 bytes/symbol
+    row = new.last_broadcast
+    assert row.kind == "float32"
+    assert row.wire_nbytes == 4 * new.layout.padded_size
+    np.testing.assert_array_equal(
+        np.asarray(wire.decode_broadcast(row)),
+        np.asarray(packing.pack(new.params, new.layout)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# quantized downlink: fleet-wide bit-identity + error feedback
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_downlink_fleet_reconstructs_bit_identical():
+    srv = FLServer(_fl_cfg(downlink_bits=4, downlink_block=256), shard_size=4)
+    base = np.asarray(srv._bcast)  # every client's replica before round 0
+    srv.run_round(0)
+    row = srv.last_broadcast
+    assert row.kind == "int4"
+    assert row.wire_nbytes == srv.last_downlink_bytes
+    assert srv.round_logs[-1].downlink_bytes == row.wire_nbytes
+    assert row.wire_nbytes < 4 * srv.layout.padded_size / 7
+    # N independent client decodes of the one broadcast row
+    recon = [
+        np.asarray(wire.decode_broadcast(row, jnp.asarray(base))) for _ in range(3)
+    ]
+    for r in recon[1:]:
+        np.testing.assert_array_equal(recon[0], r)
+    # ... and the server adopted the same reconstruction as its params
+    np.testing.assert_array_equal(
+        recon[0], np.asarray(packing.pack(srv.params, srv.layout))
+    )
+
+
+def test_quantized_downlink_error_feedback_residual():
+    srv = FLServer(_fl_cfg(downlink_bits=8), shard_size=4)
+    srv.run_round(0)
+    residual = np.asarray(srv._master - srv._bcast)
+    assert np.any(residual != 0)  # quantization left something behind
+    # the next broadcast ships master - bcast: the residual rides along
+    base = np.asarray(srv._bcast)
+    srv.run_round(1)
+    np.testing.assert_array_equal(
+        np.asarray(wire.decode_broadcast(srv.last_broadcast, jnp.asarray(base))),
+        np.asarray(srv._bcast),
+    )
+    # the fleet replica stays close to the master it tracks
+    master = np.asarray(srv._master)
+    err = np.linalg.norm(np.asarray(srv._bcast) - master)
+    assert err <= 1e-2 * max(np.linalg.norm(master), 1e-12)
+
+
+def test_quantized_downlink_run_close_to_f32():
+    cfg32 = _fl_cfg(seed=1)
+    cfg8 = _fl_cfg(seed=1, downlink_bits=8)
+    s32 = FLServer(cfg32, shard_size=4)
+    s8 = FLServer(cfg8, shard_size=4)
+    for r in range(2):
+        s32.run_round(r)
+        s8.run_round(r)
+    a, b = _flat_params(s32), _flat_params(s8)
+    assert np.linalg.norm(a - b) <= 1e-2 * np.linalg.norm(a)
+    assert s8.round_logs[-1].downlink_bytes < s32.round_logs[-1].downlink_bytes / 3
+
+
+# ---------------------------------------------------------------------------
+# quantized server state (bf16 velocity / quantized moments)
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_server_momentum_within_1pct_and_half_bytes():
+    base = dict(seed=2, server_momentum=0.9)
+    f32 = FLServer(_fl_cfg(**base), shard_size=4)
+    q = FLServer(_fl_cfg(**base, quantize_server_state=True), shard_size=4)
+    for r in range(2):
+        f32.run_round(r)
+        q.run_round(r)
+    a, b = _flat_params(f32), _flat_params(q)
+    assert np.linalg.norm(a - b) <= 1e-2 * np.linalg.norm(a)
+    assert q.server_state_nbytes > 0
+    assert q.server_state_nbytes <= 0.5 * f32.server_state_nbytes
+    assert q._velocity.dtype == jnp.bfloat16
+
+
+def test_quantized_adam_tracks_f32():
+    rng = np.random.RandomState(4)
+    params = {"w": jnp.asarray(rng.randn(600), jnp.float32)}
+    o32, oq = adam(1e-2), adam(1e-2, quantize=True)
+    s32, sq = o32.init(params), oq.init(params)
+    p32 = pq = params
+    for step in range(5):
+        g = {"w": p32["w"] * 0.1 + jnp.asarray(rng.randn(600) * 0.01, jnp.float32)}
+        u32, s32 = o32.update(g, s32, p32, jnp.asarray(step))
+        uq, sq = oq.update(g, sq, pq, jnp.asarray(step))
+        p32 = jax.tree.map(lambda p, u: p + u, p32, u32)
+        pq = jax.tree.map(lambda p, u: p + u, pq, uq)
+    diff = float(jnp.linalg.norm(p32["w"] - pq["w"]))
+    assert diff <= 1e-2 * float(jnp.linalg.norm(p32["w"]))
+    assert state_nbytes(sq) <= 0.5 * state_nbytes(s32)
+
+
+def test_quantize_state_roundtrip_error_bounded():
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(np.abs(rng.randn(1000)) * 1e-4, jnp.float32)
+    q, scale = quant.quantize_state(x)
+    back = quant.dequantize_state(q, scale)
+    assert q.dtype == jnp.int8
+    # round-to-nearest on the amax grid: error <= scale/2 per block
+    cols = np.repeat(np.asarray(scale), quant.STATE_BLOCK)[: x.shape[0]]
+    assert np.all(np.abs(np.asarray(back - x)) <= cols / 2 + 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing quantized state
+# ---------------------------------------------------------------------------
+
+
+def test_ckpt_native_bf16_half_bytes_and_bit_identical(tmp_path):
+    x = jnp.asarray(np.random.RandomState(6).randn(333), jnp.bfloat16)
+    _, leaves = ckpt._pack_tree({"m": x})
+    assert leaves[0]["dtype"] == "bf16n"
+    assert len(leaves[0]["data"]) == 2 * x.size  # native, not widened f32
+    p = str(tmp_path / "ck.msgpack.zst")
+    ckpt.save_checkpoint(p, {"m": x})
+    got, _ = ckpt.load_checkpoint(p)
+    assert got["m"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(x).view(np.uint16), np.asarray(got["m"]).view(np.uint16)
+    )
+
+
+def test_ckpt_legacy_bf16_tag_still_readable():
+    arr = np.arange(4, dtype=np.float32)
+    structure = {"t": "__leaf__", "v": 0}
+    leaves = [{"dtype": "bf16", "shape": [4], "data": arr.tobytes()}]
+    got = ckpt._unpack_tree(structure, leaves)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got, np.float32), arr)
+
+
+@pytest.mark.parametrize("opt", ["momentum", "adam"])
+def test_ckpt_roundtrip_quantized_optimizer_state(tmp_path, opt):
+    rng = np.random.RandomState(7)
+    params = {"w": jnp.asarray(rng.randn(300), jnp.float32)}
+    if opt == "momentum":
+        o = momentum(1e-2, quantize=True)
+    else:
+        o = adam(1e-2, quantize=True)
+    state = o.init(params)
+    g = {"w": jnp.asarray(rng.randn(300), jnp.float32)}
+    _, state = o.update(g, state, params, jnp.asarray(0))
+    p = str(tmp_path / "opt.msgpack.zst")
+    ckpt.save_checkpoint(p, state)
+    got, _ = ckpt.load_checkpoint(p)
+    assert state_nbytes(got) == state_nbytes(state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )
+
+
+# ---------------------------------------------------------------------------
+# AggregateInfo: typed, but still a Mapping for legacy info["..."] access
+# ---------------------------------------------------------------------------
+
+
+def test_aggregate_info_mapping_shim():
+    rng = np.random.RandomState(8)
+    ups = [{"w": jnp.asarray(rng.randn(256), jnp.float32)} for _ in range(3)]
+    layout = packing.make_layout(ups[0])
+    X = packing.pack_batch(ups, layout)
+    bits = [8, 8, 4]
+    rows = wire.encode_rows(list(X), bits, ota.derive_sr_seed(jax.random.key(0)))
+    _, info = ota.ota_aggregate_packed(
+        jax.random.key(0),
+        rows,
+        bits,
+        [1.0, 1.0, 1.0],
+        layout,
+        ota.OTAConfig(snr_db=20.0),
+    )
+    assert isinstance(info, ota.AggregateInfo)
+    assert info["uplink_bytes"] == info.uplink_bytes > 0
+    assert "noise_std" in info and "downlink_bytes" not in info  # None: absent
+    d = dict(info)
+    assert d["n_participating"] == info.n_participating
+    info.downlink_bytes = 123
+    assert info["downlink_bytes"] == 123 and len(info) == len(d) + 1
