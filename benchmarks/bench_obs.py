@@ -1,0 +1,227 @@
+"""Telemetry-layer bench: tracer overhead + round-trace acceptance
+(DESIGN.md §14).
+
+The observability subsystem (``repro.obs``) must be free when off and
+cheap when on. This bench measures both halves on the OTA data plane:
+
+- **overhead**: per-call time of ``ota.ota_aggregate_packed`` on a
+  K=32 mixed-precision packed cohort with the tracer enabled vs forced
+  off (``obs.disabled()``), min-of-reps so scheduler noise doesn't
+  decide the bar;
+- **round trace**: one ``FLServer.run_round`` under ``obs.enabled()``
+  over the fading channel, checked against the acceptance criteria —
+  >= 7 distinct pipeline span names, a Perfetto ``trace_event`` export
+  that ``json.loads`` round-trips with ``ph``/``ts``/``dur`` keys, and
+  a metrics snapshot whose ``fl.uplink_bytes`` / ``fl.downlink_bytes``
+  are bit-identical to the ``RoundLog`` that fed them, alongside
+  ``ota.truncation_rate`` and the ``jax.retraces`` jit-cache counter.
+
+``--smoke`` is the CI mode (scripts/tier1.sh): hard-asserts the bars
+above plus tracer overhead < 5% and enabled-vs-disabled round-output
+bit-identity, and writes the two CI artifacts —
+``TELEMETRY_events.jsonl`` (the JSONL metric/span ledger) and
+``TELEMETRY_round_trace.json`` (the Perfetto trace; load it at
+``ui.perfetto.dev``).
+
+Usage: python benchmarks/bench_obs.py [--smoke]
+Runnable standalone (self-locates ``src/``) or via scripts/tier1.sh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+import time
+
+try:
+    import repro  # noqa: F401  (importability probe)
+except ImportError:  # standalone invocation: put <repo>/src on sys.path
+    sys.path.insert(
+        0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.configs.base import FLConfig
+from repro.core import ota, packing
+
+# the required distinct pipeline span names a single round must emit
+# (acceptance bar: >= 7; the instrumented loop emits these 9 on the
+# ideal channel and adds channel_sample under the fading channel)
+ROUND_SPANS = (
+    "round", "plan", "client_train", "uplink_encode", "fold",
+    "finalize", "optimizer", "broadcast_encode", "feedback",
+)
+
+EVENTS_PATH = "TELEMETRY_events.jsonl"
+TRACE_PATH = "TELEMETRY_round_trace.json"
+
+
+def _packed_cohort(K: int = 32, M: int = 1 << 14, seed: int = 0):
+    """Mixed-precision packed wire rows for a K-client cohort."""
+    rng = np.random.RandomState(seed)
+    tree = {"w": jnp.asarray(rng.randn(M).astype(np.float32) * 0.01)}
+    layout = packing.make_layout(tree)
+    X = jnp.asarray(rng.randn(K, layout.padded_size).astype(np.float32)
+                    * 0.01)
+    bits = [(4, 8, 8, 16, 32)[i % 5] for i in range(K)]
+    weights = [1.0 + (i % 3) for i in range(K)]
+    key = jax.random.key(seed)
+    sr = ota.derive_sr_seed(key)
+    rows = [ota.quantize_uplink(X[i], b, sr, i) for i, b in enumerate(bits)]
+    jax.block_until_ready([r.data for r in rows])
+    return rows, bits, weights, layout, key
+
+
+def _time_agg(rows, bits, weights, layout, key, reps: int) -> float:
+    """Min-of-reps per-call seconds of the packed aggregation."""
+    cfg = ota.OTAConfig(snr_db=20.0)
+    out, _ = ota.ota_aggregate_packed(key, rows, bits, weights, layout, cfg)
+    jax.block_until_ready(jax.tree.leaves(out))  # warm: compile + caches
+    best = float("inf")
+    for r in range(reps):
+        t0 = time.perf_counter()
+        out, _ = ota.ota_aggregate_packed(jax.random.key(r), rows, bits,
+                                          weights, layout, cfg)
+        jax.block_until_ready(jax.tree.leaves(out))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_overhead(K: int = 32, M: int = 1 << 14, reps: int = 20):
+    """(enabled_s, disabled_s, overhead_frac) for the K-cohort fold."""
+    rows, bits, weights, layout, key = _packed_cohort(K, M)
+    with obs.disabled():
+        off_s = _time_agg(rows, bits, weights, layout, key, reps)
+    with obs.enabled():
+        on_s = _time_agg(rows, bits, weights, layout, key, reps)
+    return on_s, off_s, on_s / off_s - 1.0
+
+
+def trace_round(*, enabled: bool = True, seed: int = 0):
+    """One fading-channel FL round; returns (server, log, span names,
+    metrics snapshot). ``enabled=False`` runs it with telemetry forced
+    off — the bit-identity baseline."""
+    from repro.fl.server import FLServer
+
+    cfg = FLConfig(n_clients=6, clients_per_round=4, n_rounds=1,
+                   local_steps=1, local_batch=2, lr=1e-3,
+                   planner="unified", channel_model="fading", seed=seed)
+    ctx = obs.enabled() if enabled else obs.disabled()
+    with ctx:
+        obs.metrics.reset()
+        n0 = len(obs.get_tracer().events)  # disabled() keeps old events
+        srv = FLServer(cfg, shard_size=4)
+        log = srv.run_round(0)
+        names = {e.name for e in obs.get_tracer().events[n0:]}
+        snap = obs.metrics.snapshot()
+    return srv, log, names, snap
+
+
+def smoke() -> int:
+    """CI mode: hard-asserted acceptance bars (~a minute on CPU)."""
+    # ---- one traced round: spans, Perfetto export, metrics snapshot
+    srv, log, names, snap = trace_round(enabled=True)
+    missing = [s for s in ROUND_SPANS if s not in names]
+    assert not missing, f"round trace missing pipeline spans: {missing}"
+    assert len(names) >= 7, f"expected >= 7 distinct spans, got {names}"
+
+    doc = json.loads(obs.get_tracer().export_perfetto())
+    evs = doc["traceEvents"]
+    assert evs, "empty Perfetto export"
+    for ev in evs:
+        for k in ("name", "ph", "ts", "dur", "pid", "tid"):
+            assert k in ev, f"trace event missing {k!r}: {ev}"
+        assert ev["ph"] == "X", f"expected complete events, got {ev['ph']}"
+
+    ctr, gau = snap["counters"], snap["gauges"]
+    assert ctr["fl.uplink_bytes"] == log.uplink_bytes, \
+        (ctr["fl.uplink_bytes"], log.uplink_bytes)
+    assert ctr["fl.downlink_bytes"] == log.downlink_bytes, \
+        (ctr["fl.downlink_bytes"], log.downlink_bytes)
+    assert "ota.truncation_rate" in gau, sorted(gau)
+    assert ctr.get("jax.retraces", 0) > 0, "jax retrace hook not firing"
+
+    # ---- CI artifacts: JSONL ledger + Perfetto trace
+    for p in (EVENTS_PATH, TRACE_PATH):
+        if os.path.exists(p):
+            os.remove(p)
+    obs.export.dump_telemetry(EVENTS_PATH, TRACE_PATH)
+    with open(EVENTS_PATH) as f:
+        lines = [json.loads(ln) for ln in f]
+    assert any(r["kind"] == "counter" and r["name"] == "fl.uplink_bytes"
+               for r in lines), "JSONL ledger missing fl.uplink_bytes"
+    assert any(r["kind"] == "span" and r["name"] == "round"
+               for r in lines), "JSONL ledger missing round span rollup"
+    print(f"wrote {EVENTS_PATH} ({len(lines)} events) and {TRACE_PATH} "
+          f"({len(evs)} trace events)")
+
+    # ---- disabled path: zero events, bit-identical round outputs
+    srv_off, log_off, names_off, _ = trace_round(enabled=False)
+    assert not names_off, f"disabled tracer recorded spans: {names_off}"
+    assert log_off.uplink_bytes == log.uplink_bytes
+    assert log_off.n_participating == log.n_participating
+    for a, b in zip(jax.tree.leaves(srv.params),
+                    jax.tree.leaves(srv_off.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # ---- tracer overhead on the K=32 data plane
+    on_s, off_s, frac = bench_overhead()
+    print(f"K=32 fold: {off_s*1e3:.2f}ms off, {on_s*1e3:.2f}ms on "
+          f"({frac*100:+.1f}% overhead; bar < 5%)")
+    assert frac < 0.05, f"tracer overhead {frac*100:.1f}% above 5%"
+
+    print(f"smoke OK: {len(names)} distinct spans, Perfetto round-trip, "
+          f"byte counters == RoundLog, disabled path bit-identical")
+    return 0
+
+
+def json_report() -> dict:
+    """Machine-readable smoke-scale numbers (benchmarks/run.py --json)."""
+    _, log, names, snap = trace_round(enabled=True)
+    spans = obs.get_tracer().summary()  # before bench_overhead resets
+    on_s, off_s, frac = bench_overhead(reps=10)
+    return {
+        "span_names": sorted(names),
+        "n_span_names": len(names),
+        "span_rollup": spans,
+        "uplink_bytes": log.uplink_bytes,
+        "downlink_bytes": log.downlink_bytes,
+        "truncation_rate": snap["gauges"].get("ota.truncation_rate"),
+        "jax_retraces": snap["counters"].get("jax.retraces"),
+        "overhead_on_ms": on_s * 1e3,
+        "overhead_off_ms": off_s * 1e3,
+        "overhead_frac": frac,
+        "overhead_bar": 0.05,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: trace/metrics acceptance + overhead bar")
+    args = ap.parse_args()
+
+    if args.smoke:
+        raise SystemExit(smoke())
+
+    _, log, names, snap = trace_round(enabled=True)
+    print(f"round spans ({len(names)}): {sorted(names)}")
+    print(f"uplink {log.uplink_bytes} B, downlink {log.downlink_bytes} B, "
+          f"truncation {snap['gauges'].get('ota.truncation_rate'):.3f}, "
+          f"retraces {snap['counters'].get('jax.retraces'):.0f}")
+    for name, roll in sorted(obs.get_tracer().summary().items()):
+        print(f"  {name:18s} n={roll['count']:<4d} "
+              f"total={roll['total_us']/1e3:9.2f}ms "
+              f"max={roll['max_us']/1e3:8.2f}ms")
+    on_s, off_s, frac = bench_overhead()
+    print(f"K=32 fold overhead: {off_s*1e3:.2f}ms off / {on_s*1e3:.2f}ms "
+          f"on = {frac*100:+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

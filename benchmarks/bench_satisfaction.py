@@ -43,6 +43,36 @@ def run_planner(planner, users, fleet, rounds: int = 6, batched: bool = True):
     return np.array(sats), np.array(energies), dict(sorted(hist.items())), plan_s
 
 
+def json_report() -> Dict:
+    """Machine-readable smoke-scale numbers (benchmarks/run.py --json):
+    Fig.3 planner means at reduced scale + the cohort-batched vs legacy
+    per-client planning-time delta (DESIGN.md §10)."""
+    n_clients, rounds, seed = 40, 4, 0
+    users = make_users(n_clients, seed=seed)
+    fleet = make_fleet(n_clients, seed=seed)
+    report: Dict = {"n_clients": n_clients, "rounds": rounds, "planners": {}}
+    batched_s = 0.0
+    for name, planner in (
+        ("unified", UnifiedTierPlanner()),
+        ("rag", RAGPlanner(seed=seed)),
+        ("rag_energy", RAGPlanner(seed=seed, energy_priority=8.0)),
+    ):
+        sats, ens, hist, plan_s = run_planner(planner, users, fleet, rounds)
+        report["planners"][name] = {
+            "satisfaction": float(sats.mean()),
+            "rel_energy": float(ens.mean()),
+            "bits_hist": {str(b): int(c) for b, c in hist.items()},
+        }
+        if name == "rag":
+            batched_s = plan_s
+    *_, legacy_s = run_planner(RAGPlanner(seed=seed), users, fleet, rounds,
+                               batched=False)
+    report["planning_batched_s"] = batched_s
+    report["planning_legacy_s"] = legacy_s
+    report["planning_speedup"] = legacy_s / max(batched_s, 1e-9)
+    return report
+
+
 def main(n_clients: int = 100, rounds: int = 6, seed: int = 0,
          csv: bool = False) -> Dict[str, Tuple[float, float]]:
     users = make_users(n_clients, seed=seed)

@@ -35,6 +35,32 @@ def run_strategy(strategy: str, *, rounds: int, n_clients: int,
     return acc
 
 
+def json_report() -> Dict:
+    """Machine-readable smoke-scale numbers (benchmarks/run.py --json):
+    per-category accuracy under the three contribution strategies at
+    reduced scale, plus minority/majority deltas vs FedAvg."""
+    rounds, n_clients, per_round, seed = 3, 12, 4, 0
+    report: Dict = {"rounds": rounds, "n_clients": n_clients,
+                    "per_round": per_round, "strategies": {}}
+    results = {}
+    for strat in ("fedavg", "class_equal", "majority_centric"):
+        r = run_strategy(strat, rounds=rounds, n_clients=n_clients,
+                         per_round=per_round, seed=seed)
+        results[strat] = r
+        report["strategies"][strat] = {
+            "per_category": {c: float(r[c]) for c in CATEGORIES},
+            "train_loss": float(r["_loss"]),
+        }
+    fa = results["fedavg"]
+    for strat in ("class_equal", "majority_centric"):
+        r = results[strat]
+        report["strategies"][strat]["minority_delta"] = float(
+            np.mean([r[c] - fa[c] for c in MINORITY]))
+        report["strategies"][strat]["majority_delta"] = float(
+            np.mean([r[c] - fa[c] for c in MAJORITY]))
+    return report
+
+
 def main(rounds: int = 10, n_clients: int = 24, per_round: int = 6,
          seed: int = 0, csv: bool = False):
     results = {}

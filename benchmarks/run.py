@@ -6,10 +6,13 @@ assignment's roofline table. Prints ``name,us_per_call,derived`` CSV.
   PYTHONPATH=src python -m benchmarks.run --json     # BENCH_<name>.json
 
 ``--json`` skips the CSV sweeps and instead writes one
-``BENCH_<name>.json`` per data-plane bench (aggregation, retrieval,
-streaming, channel) into the working directory — smoke-scale timings
-plus the acceptance-bar values each bench's ``--smoke`` mode asserts,
-for machine consumption (dashboards, regression diffs).
+``BENCH_<name>.json`` per registered bench (``repro.obs.export
+.BENCH_REPORTS``: aggregation, retrieval, streaming, channel,
+satisfaction, strategies, obs) into the working directory — smoke-scale
+timings plus the acceptance-bar values each bench's ``--smoke`` mode
+asserts, for machine consumption (dashboards, regression diffs). Each
+bench only supplies a ``json_report()`` payload; the open/dump/print
+plumbing lives once in ``repro.obs.export`` (DESIGN.md §14).
 """
 import sys
 from pathlib import Path
@@ -22,22 +25,12 @@ for _p in (str(_ROOT), str(_ROOT / "src")):
         sys.path.insert(0, _p)
 
 import argparse
-import json
 
 
 def _write_json() -> None:
-    from benchmarks import (bench_aggregation, bench_channel,
-                            bench_retrieval, bench_streaming)
+    from repro.obs import export
 
-    for name, mod in [("aggregation", bench_aggregation),
-                      ("retrieval", bench_retrieval),
-                      ("streaming", bench_streaming),
-                      ("channel", bench_channel)]:
-        path = f"BENCH_{name}.json"
-        with open(path, "w") as f:
-            json.dump(mod.json_report(), f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"wrote {path}")
+    export.write_all_bench_reports()
 
 
 def main() -> None:

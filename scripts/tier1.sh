@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 verify (see ROADMAP.md): docs consistency, packed-uplink bench
 # smoke, retrieval-engine bench smoke, streaming-aggregation bench smoke,
-# physical-channel bench smoke (all hard-asserted acceptance checks),
-# then the whole suite, stop on first failure. Run from the repo root:
+# physical-channel bench smoke, telemetry bench smoke (all hard-asserted
+# acceptance checks), then the whole suite, stop on first failure. Run
+# from the repo root:
 #   bash scripts/tier1.sh [extra pytest args...]
-# CI (.github/workflows/ci.yml) runs these same six commands. The
-# PYTHONPATH export is belt-and-braces: pytest (conftest.py) and the
-# benches (in-file bootstrap) self-locate src/ when invoked standalone.
+# CI (.github/workflows/ci.yml) runs these same seven commands (and
+# uploads the telemetry smoke's TELEMETRY_* artifacts). The PYTHONPATH
+# export is belt-and-braces: pytest (conftest.py) and the benches
+# (in-file bootstrap) self-locate src/ when invoked standalone.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -15,4 +17,5 @@ python benchmarks/bench_aggregation.py --smoke
 python benchmarks/bench_retrieval.py --smoke
 python benchmarks/bench_streaming.py --smoke
 python benchmarks/bench_channel.py --smoke
+python benchmarks/bench_obs.py --smoke
 python -m pytest -x -q "$@"

@@ -79,6 +79,7 @@ import jax.numpy as jnp
 
 from collections.abc import Mapping
 
+from repro import obs
 from repro.core import channel as chan
 from repro.core import packing, quant, wire
 from repro.kernels import ops as kops
@@ -292,20 +293,31 @@ def _fold_groups(acc, kinds, datas, scales, wg, *, gains=None, use_kernel: bool)
     left-associated group sum the pre-§11 barrier loop computed, so the
     synchronous path and a single-batch streaming fold are bit-identical
     by construction.
+
+    Telemetry (DESIGN.md §14): the whole fold runs under one ``fold``
+    span, and each storage group bumps the per-storage-class row
+    counter ``ota.rows{kind=...}`` — the observation side only; the
+    folded values are untouched either way.
     """
-    off = 0
-    for (kind, qblock), data, scale in zip(kinds, datas, scales):
-        kg = scale.shape[0]
-        wseg = jax.lax.slice_in_dim(wg, off, off + kg)
-        gseg = None if gains is None else jax.lax.slice_in_dim(gains, off, off + kg)
-        off += kg
-        packed4 = kind == "int4"
-        if acc is None:
-            fn = kops.ota_dequant_superpose if use_kernel else _packed_ref_jit
-            acc = fn(data, scale, wseg, gains=gseg, qblock=qblock, packed4=packed4)
-        else:
-            fn = kops.ota_fold_packed if use_kernel else _fold_ref_jit
-            acc = fn(acc, data, scale, wseg, gains=gseg, qblock=qblock, packed4=packed4)
+    with obs.span("fold", groups=len(kinds)):
+        off = 0
+        for (kind, qblock), data, scale in zip(kinds, datas, scales):
+            kg = scale.shape[0]
+            obs.metrics.inc("ota.rows", kg, kind=kind)
+            wseg = jax.lax.slice_in_dim(wg, off, off + kg)
+            gseg = (
+                None if gains is None else jax.lax.slice_in_dim(gains, off, off + kg)
+            )
+            off += kg
+            packed4 = kind == "int4"
+            if acc is None:
+                fn = kops.ota_dequant_superpose if use_kernel else _packed_ref_jit
+                acc = fn(data, scale, wseg, gains=gseg, qblock=qblock, packed4=packed4)
+            else:
+                fn = kops.ota_fold_packed if use_kernel else _fold_ref_jit
+                acc = fn(
+                    acc, data, scale, wseg, gains=gseg, qblock=qblock, packed4=packed4
+                )
     return acc
 
 
@@ -362,7 +374,8 @@ def _aggregate_rows_flat(
         gg = gains[perm]  # group-order view of the per-row gains
     wg = w[perm]  # group-order view of the cohort weights
     acc = _fold_groups(None, kinds, datas, scales, wg, gains=gg, use_kernel=use_kernel)
-    y, noise_std = _awgn_epilogue(key, acc, cfg=cfg, n_valid=n_valid)
+    with obs.span("finalize"):
+        y, noise_std = _awgn_epilogue(key, acc, cfg=cfg, n_valid=n_valid)
     return y, habs, participate, noise_std
 
 
@@ -484,6 +497,8 @@ class OtaAccumulator:
             return self
         w = jnp.asarray(weights, jnp.float32)
         if staleness is not None:
+            for s in staleness:  # late-arrival discount distribution (§14)
+                obs.metrics.observe("stream.staleness_discount", float(s))
             w = w * jnp.asarray(staleness, jnp.float32)
         kinds, datas, scales, perm = _group_rows(rows)
         g = None if gains is None else jnp.asarray(gains, jnp.float32)[perm]
@@ -509,15 +524,17 @@ class OtaAccumulator:
         ``reset`` to start the next round.
         """
         assert self._acc is not None, "finalize() before any fold()"
-        y, noise_std = _awgn_epilogue(
-            key, self._acc, cfg=self.cfg, n_valid=self.layout.size
-        )
+        with obs.span("finalize"):
+            y, noise_std = _awgn_epilogue(
+                key, self._acc, cfg=self.cfg, n_valid=self.layout.size
+            )
         info = AggregateInfo(
             noise_std=float(noise_std),
             n_folded=self.n_folded,
             uplink_bytes=self.wire_bytes,
             uplink_bytes_f32=4 * self.layout.padded_size * self.n_folded,
         )
+        info.publish()
         return packing.unpack(y, self.layout, cast=False), info
 
 
@@ -561,6 +578,43 @@ class AggregateInfo(Mapping):
 
     def __len__(self) -> int:
         return len(self._present())
+
+    def publish(self, registry=None) -> None:
+        """Push this aggregation's numbers into the metrics registry
+        (DESIGN.md §14) — the ``obs.metrics`` side of the report.
+
+        Counters accumulate across rounds (``ota.uplink_bytes``,
+        ``ota.rows_truncated``, ``ota.aggregations``); gauges carry the
+        latest round (``ota.noise_std``, ``ota.truncation_rate``,
+        ``ota.mean_misalignment``). The truncation rate covers both
+        channel paths: the physical model's truncated-inversion count
+        (``n_truncated``) and the legacy coin-flip's non-participating
+        fraction come out of the same participation vector.
+        """
+        m = registry or obs.metrics.REGISTRY
+        m.inc("ota.aggregations")
+        m.set_gauge("ota.noise_std", self.noise_std)
+        if self.uplink_bytes is not None:
+            m.inc("ota.uplink_bytes", self.uplink_bytes)
+        if self.n_folded is not None:
+            m.inc("ota.rows_folded", self.n_folded)
+        if self.n_participating is not None:
+            m.set_gauge("ota.n_participating", self.n_participating)
+        if self.participation:
+            k = len(self.participation)
+            n_trunc = (
+                self.n_truncated
+                if self.n_truncated is not None
+                else k - sum(bool(p) for p in self.participation)
+            )
+            m.set_gauge("ota.truncation_rate", n_trunc / k)
+            if n_trunc:
+                m.inc("ota.rows_truncated", n_trunc)
+        if self.channel_gains:
+            alive = [g for g in self.channel_gains if g > 0]
+            if alive:
+                miss = sum(1.0 - g for g in alive) / len(alive)
+                m.set_gauge("ota.mean_misalignment", miss)
 
 
 def _info(habs, participate, noise_std, **kw) -> AggregateInfo:
@@ -655,6 +709,7 @@ def ota_aggregate_packed(
             use_kernel=use_kernel,
         )
         info = _info(habs, participate, noise_std)
+    info.publish()
     agg = packing.unpack(y, layout, cast=False)
     return agg, info
 

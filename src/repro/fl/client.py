@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import packing
 from repro.core.profiling.hardware import DeviceSpec
 from repro.core.profiling.users import UserTruth
@@ -198,9 +199,10 @@ class FLClient:
             if sr_seed is not None:
                 from repro.core import wire
 
-                delta = wire.encode_row(
-                    delta, bits, sr_seed, uplink_row, block=quant_block
-                )
+                with obs.span("uplink_encode", bits=bits):
+                    delta = wire.encode_row(
+                        delta, bits, sr_seed, uplink_row, block=quant_block
+                    )
         metrics = {
             "loss_first": losses[0],
             "loss_last": losses[-1],

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ArchConfig, FLConfig, get_arch
 from repro.core import channel as chanmod
 from repro.core import ota, packing, wire
@@ -106,7 +107,10 @@ class RoundLog:
     ``uplink_bytes``/``downlink_bytes`` are the round's two wire legs —
     the cohort's packed uplink rows and the one broadcast row every
     client receives (DESIGN.md §13) — so round-trip accounting reads
-    straight off the log.
+    straight off the log. ``publish`` pushes the same values into the
+    ``obs.metrics`` registry (DESIGN.md §14) — the log stays the
+    per-round record, the registry the cross-round rollup, and the two
+    agree bit-for-bit because one feeds the other.
     """
 
     round: int
@@ -117,6 +121,18 @@ class RoundLog:
     train_loss: float
     uplink_bytes: int = 0
     downlink_bytes: int = 0
+
+    def publish(self, registry=None) -> "RoundLog":
+        m = registry or obs.metrics.REGISTRY
+        m.inc("fl.rounds")
+        m.inc("fl.uplink_bytes", self.uplink_bytes)
+        m.inc("fl.downlink_bytes", self.downlink_bytes)
+        m.set_gauge("fl.n_participating", self.n_participating)
+        if not math.isnan(self.train_loss):
+            m.set_gauge("fl.train_loss", self.train_loss)
+        m.set_gauge("fl.mean_satisfaction", self.mean_satisfaction)
+        m.set_gauge("fl.mean_energy", self.mean_energy)
+        return self
 
 
 class FLServer:
@@ -176,6 +192,11 @@ class FLServer:
         self._chan_hist: Dict[int, List[int]] = {}  # id -> [n_trunc, n_seen]
         self.round_logs: List[RoundLog] = []
         self._rng = np.random.RandomState(fl_cfg.seed + 7)
+
+    def _log_round(self, log: RoundLog) -> RoundLog:
+        """Record the round log and publish it into ``obs.metrics``."""
+        self.round_logs.append(log.publish())
+        return log
 
     # -- client selection (round-robin batches, paper default scheduling)
     def select(self, rnd: int) -> List[int]:
@@ -277,7 +298,8 @@ class FLServer:
         """
         if self.channel is None:
             return None
-        state = self.channel.sample(round_key, len(ids))
+        with obs.span("channel_sample", cohort=len(ids)):
+            state = self.channel.sample(round_key, len(ids))
         snr = np.asarray(jax.device_get(state.snr_db(self.cfg.snr_db)))
         trunc = np.asarray(jax.device_get(state.truncated))
         for pos, i in enumerate(ids):
@@ -313,32 +335,39 @@ class FLServer:
         ``self.params``, so the quantization residual stays in
         ``master - bcast`` and rides the next round's broadcast.
         """
-        u = packing.pack(agg, self.layout)
-        if self.cfg.server_momentum > 0.0:
-            if not hasattr(self, "_velocity"):
-                self._velocity = jnp.zeros_like(u, jnp.float32)
-            v = self.cfg.server_momentum * self._velocity.astype(jnp.float32) + u
-            self._velocity = (
-                v.astype(jnp.bfloat16) if self.cfg.quantize_server_state else v
-            )
-            u = v
-        self._master = self._master + u
+        with obs.span("optimizer"):
+            u = packing.pack(agg, self.layout)
+            if self.cfg.server_momentum > 0.0:
+                if not hasattr(self, "_velocity"):
+                    self._velocity = jnp.zeros_like(u, jnp.float32)
+                v = (
+                    self.cfg.server_momentum * self._velocity.astype(jnp.float32)
+                    + u
+                )
+                self._velocity = (
+                    v.astype(jnp.bfloat16)
+                    if self.cfg.quantize_server_state
+                    else v
+                )
+                u = v
+            self._master = self._master + u
 
-        if packing.wire_kind(self.cfg.downlink_bits) == "float32":
-            payload = self._master  # absolute params: the passthrough oracle
-        else:
-            payload = self._master - self._bcast
-        row = wire.encode_row(
-            payload,
-            self.cfg.downlink_bits,
-            ota.derive_dl_seed(round_key),
-            0,
-            block=self.cfg.downlink_block,
-        )
-        self._bcast = wire.decode_broadcast(row, self._bcast)
-        self.last_broadcast = row
-        self.last_downlink_bytes = row.wire_nbytes
-        self.params = packing.unpack(self._bcast, self.layout)
+        with obs.span("broadcast_encode", bits=self.cfg.downlink_bits):
+            if packing.wire_kind(self.cfg.downlink_bits) == "float32":
+                payload = self._master  # absolute params: passthrough oracle
+            else:
+                payload = self._master - self._bcast
+            row = wire.encode_row(
+                payload,
+                self.cfg.downlink_bits,
+                ota.derive_dl_seed(round_key),
+                0,
+                block=self.cfg.downlink_block,
+            )
+            self._bcast = wire.decode_broadcast(row, self._bcast)
+            self.last_broadcast = row
+            self.last_downlink_bytes = row.wire_nbytes
+            self.params = packing.unpack(self._bcast, self.layout)
 
     @property
     def server_state_nbytes(self) -> int:
@@ -359,59 +388,68 @@ class FLServer:
         return sats, energies
 
     def run_round(self, rnd: int) -> RoundLog:
-        ids = self.select(rnd)
-        users = [self.users[i] for i in ids]
-        specs = [self.fleet[i] for i in ids]
-        self._apply_drift(rnd, users, specs)
-        decisions, bits = self._plan(users, specs)
+        # The whole round runs under one ``round`` span; each pipeline
+        # stage gets its own nested span (DESIGN.md §14) — same span
+        # names as the streaming loop, so traces from either engine
+        # line up in one Perfetto view.
+        with obs.span("round", round=rnd):
+            ids = self.select(rnd)
+            users = [self.users[i] for i in ids]
+            specs = [self.fleet[i] for i in ids]
+            with obs.span("plan", cohort=len(ids)):
+                self._apply_drift(rnd, users, specs)
+                decisions, bits = self._plan(users, specs)
 
-        # The round key is fixed before the client loop so clients can
-        # quantize + bit-pack their uplinks at the edge with the round's
-        # shared dither stream (ota.derive_sr_seed); the server only ever
-        # sees PackedRow wire rows, never the f32 (K, M) matrix.
-        round_key = jax.random.key(self.cfg.seed * 131 + rnd)
-        sr_seed = ota.derive_sr_seed(round_key)
-        chan_state = self._sample_round_channel(round_key, ids)
-        deltas, weights, losses, active_ids, row_gains = self._train_cohort(
-            decisions, ids, rnd, sr_seed, chan_state
-        )
-        if not deltas:  # everyone dropped (or truncated): skip aggregation
-            log = RoundLog(rnd, bits, 0.0, 0.0, 0, float("nan"))
-            self.round_logs.append(log)
-            return log
+            # The round key is fixed before the client loop so clients can
+            # quantize + bit-pack their uplinks at the edge with the round's
+            # shared dither stream (ota.derive_sr_seed); the server only ever
+            # sees PackedRow wire rows, never the f32 (K, M) matrix.
+            round_key = jax.random.key(self.cfg.seed * 131 + rnd)
+            sr_seed = ota.derive_sr_seed(round_key)
+            chan_state = self._sample_round_channel(round_key, ids)
+            with obs.span("client_train"):
+                deltas, weights, losses, active_ids, row_gains = (
+                    self._train_cohort(decisions, ids, rnd, sr_seed, chan_state)
+                )
+            if not deltas:  # everyone dropped (or truncated): skip aggregation
+                return self._log_round(
+                    RoundLog(rnd, bits, 0.0, 0.0, 0, float("nan"))
+                )
 
-        # ---- mixed-precision OTA aggregation: the clients' quantized,
-        # bit-packed wire rows go straight into the fused dequant +
-        # superpose data plane (grouped per storage class, DESIGN.md §5).
-        # Under the fading channel the reporting rows' effective gains
-        # ride inside the fused pass (gains=, DESIGN.md §12).
-        agg, info = ota.ota_aggregate_packed(
-            round_key,
-            deltas,
-            [bits[self.users[i].user_id] for i in active_ids],
-            weights,
-            self.layout,
-            ota.OTAConfig(snr_db=self.cfg.snr_db),
-            gains=None if row_gains is None else jnp.asarray(
-                row_gains, jnp.float32),
-        )
-        self.last_uplink_bytes = info["uplink_bytes"]
-        self._apply_update(agg, round_key)
-        info.downlink_bytes = self.last_downlink_bytes
-        sats, energies = self._observe_feedback(decisions, users, specs)
+            # ---- mixed-precision OTA aggregation: the clients' quantized,
+            # bit-packed wire rows go straight into the fused dequant +
+            # superpose data plane (grouped per storage class, DESIGN.md §5).
+            # Under the fading channel the reporting rows' effective gains
+            # ride inside the fused pass (gains=, DESIGN.md §12).
+            agg, info = ota.ota_aggregate_packed(
+                round_key,
+                deltas,
+                [bits[self.users[i].user_id] for i in active_ids],
+                weights,
+                self.layout,
+                ota.OTAConfig(snr_db=self.cfg.snr_db),
+                gains=None
+                if row_gains is None
+                else jnp.asarray(row_gains, jnp.float32),
+            )
+            self.last_uplink_bytes = info["uplink_bytes"]
+            self._apply_update(agg, round_key)
+            info.downlink_bytes = self.last_downlink_bytes
+            with obs.span("feedback"):
+                sats, energies = self._observe_feedback(decisions, users, specs)
 
-        log = RoundLog(
-            round=rnd,
-            bits=bits,
-            mean_satisfaction=float(np.mean(sats)),
-            mean_energy=float(np.mean(energies)),
-            n_participating=info["n_participating"],
-            train_loss=float(np.mean(losses)),
-            uplink_bytes=info["uplink_bytes"],
-            downlink_bytes=self.last_downlink_bytes,
-        )
-        self.round_logs.append(log)
-        return log
+            return self._log_round(
+                RoundLog(
+                    round=rnd,
+                    bits=bits,
+                    mean_satisfaction=float(np.mean(sats)),
+                    mean_energy=float(np.mean(energies)),
+                    n_participating=info["n_participating"],
+                    train_loss=float(np.mean(losses)),
+                    uplink_bytes=info["uplink_bytes"],
+                    downlink_bytes=self.last_downlink_bytes,
+                )
+            )
 
     def run(self, n_rounds: Optional[int] = None, *, verbose: bool = False):
         for r in range(n_rounds or self.cfg.n_rounds):
@@ -563,6 +601,15 @@ class StreamRoundLog(RoundLog):
     n_late: int = 0
     n_lost: int = 0
 
+    def publish(self, registry=None) -> "StreamRoundLog":
+        m = registry or obs.metrics.REGISTRY
+        super().publish(m)
+        m.inc("stream.on_time", self.n_on_time)
+        m.inc("stream.late", self.n_late)
+        m.inc("stream.lost", self.n_lost)
+        m.set_gauge("stream.sim_seconds", self.sim_seconds)
+        return self
+
 
 class StreamingFLServer(FLServer):
     """Event-driven buffered round loop (FedBuff-style, DESIGN.md §11).
@@ -611,22 +658,32 @@ class StreamingFLServer(FLServer):
         return times
 
     def run_round(self, rnd: int) -> StreamRoundLog:
+        # Same span names as the synchronous loop (DESIGN.md §14): the
+        # arrival simulation and wave bookkeeping live inside the shared
+        # stage spans, so a no-deadline streaming trace and a barrier
+        # trace show the identical pipeline.
+        with obs.span("round", round=rnd):
+            return self._run_round_inner(rnd)
+
+    def _run_round_inner(self, rnd: int) -> StreamRoundLog:
         ids = self.select(rnd)
         users = [self.users[i] for i in ids]
         specs = [self.fleet[i] for i in ids]
-        self._apply_drift(rnd, users, specs)
-        decisions, bits = self._plan(users, specs)
+        with obs.span("plan", cohort=len(ids)):
+            self._apply_drift(rnd, users, specs)
+            decisions, bits = self._plan(users, specs)
 
         round_key = jax.random.key(self.cfg.seed * 131 + rnd)
         sr_seed = ota.derive_sr_seed(round_key)
         chan_state = self._sample_round_channel(round_key, ids)
-        deltas, weights, losses, active_ids, row_gains = self._train_cohort(
-            decisions, ids, rnd, sr_seed, chan_state
-        )
+        with obs.span("client_train"):
+            deltas, weights, losses, active_ids, row_gains = self._train_cohort(
+                decisions, ids, rnd, sr_seed, chan_state
+            )
         if not deltas:  # everyone dropped in training: skip aggregation
-            log = StreamRoundLog(rnd, bits, 0.0, 0.0, 0, float("nan"))
-            self.round_logs.append(log)
-            return log
+            return self._log_round(
+                StreamRoundLog(rnd, bits, 0.0, 0.0, 0, float("nan"))
+            )
 
         # ---- arrival simulation + round plan (trigger/late/lost)
         times = self._sample_arrivals(deltas, active_ids, rnd)
@@ -646,11 +703,18 @@ class StreamingFLServer(FLServer):
         self.last_times, self.last_plan = times, plan  # introspection
         counted = list(plan.counted)
         if not counted:  # every uplink lost in the air: skip aggregation
-            log = StreamRoundLog(
-                rnd, bits, 0.0, 0.0, 0, float("nan"), sim_seconds=plan.t_close, n_lost=n
+            return self._log_round(
+                StreamRoundLog(
+                    rnd,
+                    bits,
+                    0.0,
+                    0.0,
+                    0,
+                    float("nan"),
+                    sim_seconds=plan.t_close,
+                    n_lost=n,
+                )
             )
-            self.round_logs.append(log)
-            return log
 
         # ---- channel + weight renormalisation over the counted set, in
         # cohort order, at trigger time (one draw per round — the same
@@ -700,21 +764,22 @@ class StreamingFLServer(FLServer):
         self.last_uplink_bytes = info["uplink_bytes"]
         self._apply_update(agg, round_key)
         info.downlink_bytes = self.last_downlink_bytes
-        sats, energies = self._observe_feedback(decisions, users, specs)
+        with obs.span("feedback"):
+            sats, energies = self._observe_feedback(decisions, users, specs)
 
-        log = StreamRoundLog(
-            round=rnd,
-            bits=bits,
-            mean_satisfaction=float(np.mean(sats)),
-            mean_energy=float(np.mean(energies)),
-            n_participating=int(jax.device_get(participate).sum()),
-            train_loss=float(np.mean([losses[j] for j in counted])),
-            uplink_bytes=info["uplink_bytes"],
-            downlink_bytes=self.last_downlink_bytes,
-            sim_seconds=plan.t_close,
-            n_on_time=len(plan.on_time),
-            n_late=len(plan.late),
-            n_lost=len(plan.lost),
+        return self._log_round(
+            StreamRoundLog(
+                round=rnd,
+                bits=bits,
+                mean_satisfaction=float(np.mean(sats)),
+                mean_energy=float(np.mean(energies)),
+                n_participating=int(jax.device_get(participate).sum()),
+                train_loss=float(np.mean([losses[j] for j in counted])),
+                uplink_bytes=info["uplink_bytes"],
+                downlink_bytes=self.last_downlink_bytes,
+                sim_seconds=plan.t_close,
+                n_on_time=len(plan.on_time),
+                n_late=len(plan.late),
+                n_lost=len(plan.lost),
+            )
         )
-        self.round_logs.append(log)
-        return log

@@ -1,4 +1,8 @@
 from repro.kernels.ops import (  # noqa: F401
-    fake_quant, flash_mha, ota_aggregate, ota_quantize_superpose, qmatmul,
+    fake_quant,
+    flash_mha,
+    ota_aggregate,
+    ota_quantize_superpose,
+    qmatmul,
     quantize_weights,
 )

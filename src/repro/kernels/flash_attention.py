@@ -27,8 +27,19 @@ BK = 128
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                  *, n_k: int, causal: bool, scale: float):
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    n_k: int,
+    causal: bool,
+    scale: float,
+):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -41,8 +52,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     q = q_ref[0]  # (BQ, D)
     k = k_ref[0]  # (BK, D)
     v = v_ref[0]
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+    s = (
+        jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * scale
+    )
     if causal:
         q_pos = qi * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
         k_pos = ki * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
@@ -54,21 +69,29 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     p = jnp.exp(s - m_new)
     corr = jnp.exp(m_prev - m_new)
     l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
-    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype),
+        v,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
     acc_ref[...] = acc_ref[...] * corr + pv
     m_ref[...] = m_new
     l_ref[...] = l_new
 
     @pl.when(ki == n_k - 1)
     def _done():
-        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
-                    ).astype(o_ref.dtype)
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-                    causal: bool = True,
-                    interpret: bool = False) -> jnp.ndarray:
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    interpret: bool = False,
+) -> jnp.ndarray:
     """q: (BH, Sq, D); k/v: (BH, Sk, D). Sq % BQ == Sk % BK == 0.
 
     BH is the flattened batch·heads axis (GQA grouping is done by the
@@ -81,8 +104,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     n_k = Sk // BK
     grid = (BH, n_q, n_k)
     return pl.pallas_call(
-        functools.partial(_flash_kernel, n_k=n_k, causal=causal,
-                          scale=D ** -0.5),
+        functools.partial(_flash_kernel, n_k=n_k, causal=causal, scale=D**-0.5),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, BQ, D), lambda b, i, j: (b, i, 0)),
@@ -92,9 +114,9 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         out_specs=pl.BlockSpec((1, BQ, D), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((BQ, 1), jnp.float32),   # running max
-            pltpu.VMEM((BQ, 1), jnp.float32),   # running denom
-            pltpu.VMEM((BQ, D), jnp.float32),   # output accumulator
+            pltpu.VMEM((BQ, 1), jnp.float32),  # running max
+            pltpu.VMEM((BQ, 1), jnp.float32),  # running denom
+            pltpu.VMEM((BQ, D), jnp.float32),  # output accumulator
         ],
         interpret=interpret,
     )(q, k, v)

@@ -35,8 +35,13 @@ def _pad_to(x: jnp.ndarray, m: int, axis: int = 0) -> Tuple[jnp.ndarray, int]:
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "stochastic"))
-def fake_quant(x: jnp.ndarray, bits: int, *, stochastic: bool = False,
-               key: Optional[jax.Array] = None) -> jnp.ndarray:
+def fake_quant(
+    x: jnp.ndarray,
+    bits: int,
+    *,
+    stochastic: bool = False,
+    key: Optional[jax.Array] = None,
+) -> jnp.ndarray:
     """Per-tensor fake-quant of an arbitrary-shape tensor via the kernel."""
     interpret = _on_cpu()
     qmax = float(qrange(bits))
@@ -58,22 +63,26 @@ def fake_quant(x: jnp.ndarray, bits: int, *, stochastic: bool = False,
 
 
 @jax.jit
-def ota_aggregate(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
-                  noise_std: jnp.ndarray) -> jnp.ndarray:
+def ota_aggregate(
+    x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray, noise_std: jnp.ndarray
+) -> jnp.ndarray:
     """Superpose K flat client streams. x: (K, M); w: (K,); noise: (M,)."""
     interpret = _on_cpu()
     M = x.shape[1]
     xp, pad = _pad_to(x, _ota.BLOCK_COLS, axis=1)
     np_, _ = _pad_to(noise, _ota.BLOCK_COLS)
-    out = _ota.ota_aggregate_2d(xp, w, np_, jnp.asarray(noise_std),
-                                interpret=interpret)
+    out = _ota.ota_aggregate_2d(xp, w, np_, jnp.asarray(noise_std), interpret=interpret)
     return out[:M]
 
 
 @jax.jit
-def ota_quantize_superpose(x: jnp.ndarray, scale: jnp.ndarray,
-                           qmax: jnp.ndarray, w: jnp.ndarray,
-                           seed: jnp.ndarray):
+def ota_quantize_superpose(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    qmax: jnp.ndarray,
+    w: jnp.ndarray,
+    seed: jnp.ndarray,
+):
     """Fused per-client stochastic quantize -> dequant -> weighted superpose.
 
     x: (K, M); scale/qmax/w: (K,) (qmax == 0 => fp32 passthrough row);
@@ -88,15 +97,22 @@ def ota_quantize_superpose(x: jnp.ndarray, scale: jnp.ndarray,
     interpret = jax.devices()[0].platform != "tpu"
     M = x.shape[1]
     xp, _ = _pad_to(x, _otaf.BLOCK_COLS, axis=1)
-    acc, ss = _otaf.ota_fused_2d(xp, scale, qmax, w, jnp.asarray(seed),
-                                 interpret=interpret)
+    acc, ss = _otaf.ota_fused_2d(
+        xp, scale, qmax, w, jnp.asarray(seed), interpret=interpret
+    )
     return acc[:M], ss.reshape(())
 
 
 @functools.partial(jax.jit, static_argnames=("qblock", "packed4"))
-def ota_dequant_superpose(q: jnp.ndarray, scale: jnp.ndarray,
-                          w: jnp.ndarray, *, gains=None, qblock: int = 0,
-                          packed4: bool = False):
+def ota_dequant_superpose(
+    q: jnp.ndarray,
+    scale: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    gains=None,
+    qblock: int = 0,
+    packed4: bool = False,
+):
     """Receiver half of the packed uplink: dequant + weighted superpose.
 
     q: (K, M) int8/int16/f32 pre-quantized client symbols, or (K, M//2)
@@ -118,15 +134,22 @@ def ota_dequant_superpose(q: jnp.ndarray, scale: jnp.ndarray,
     bc = _otaf.BLOCK_COLS // 2 if packed4 else _otaf.BLOCK_COLS
     M = 2 * q.shape[1] if packed4 else q.shape[1]
     qp, _ = _pad_to(q, bc, axis=1)
-    out = _otaf.ota_packed_2d(qp, scale, w, gains=gains, qblock=qblock,
-                              packed4=packed4, interpret=interpret)
+    out = _otaf.ota_packed_2d(
+        qp, scale, w, gains=gains, qblock=qblock, packed4=packed4, interpret=interpret
+    )
     return out[:M]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
-def topk_cosine(qm: jnp.ndarray, recs: jnp.ndarray,
-                scales: Optional[jnp.ndarray], n: jnp.ndarray, *,
-                k: int, use_kernel: bool = True):
+def topk_cosine(
+    qm: jnp.ndarray,
+    recs: jnp.ndarray,
+    scales: Optional[jnp.ndarray],
+    n: jnp.ndarray,
+    *,
+    k: int,
+    use_kernel: bool = True,
+):
     """Batched cosine top-k over an arena record slab.
 
     qm: (Q, D) f32 unit-norm query batch; recs: (Np, D) f32 or int8
@@ -151,17 +174,23 @@ def topk_cosine(qm: jnp.ndarray, recs: jnp.ndarray,
     qp = jnp.pad(qm, ((0, Qp - Q), (0, 0))) if Qp != Q else qm
     if use_kernel:
         interpret = jax.devices()[0].platform != "tpu"
-        s, i = _tk.topk_similarity_2d(qp, recs, scales, n,
-                                      interpret=interpret)
+        s, i = _tk.topk_similarity_2d(qp, recs, scales, n, interpret=interpret)
     else:
         s, i = _ref.topk_similarity_ref(qp, recs, scales, n)
     return s[:Q, :k], i[:Q, :k]
 
 
 @functools.partial(jax.jit, static_argnames=("qblock", "packed4"))
-def ota_fold_packed(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
-                    w: jnp.ndarray, *, gains=None, qblock: int = 0,
-                    packed4: bool = False):
+def ota_fold_packed(
+    acc: jnp.ndarray,
+    q: jnp.ndarray,
+    scale: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    gains=None,
+    qblock: int = 0,
+    packed4: bool = False,
+):
     """Fold one packed micro-batch into the persistent superposition state.
 
     The streaming-round primitive (DESIGN.md §11): acc is the running
@@ -182,8 +211,16 @@ def ota_fold_packed(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
     qp, _ = _pad_to(q, bc, axis=1)
     Mp = 2 * qp.shape[1] if packed4 else qp.shape[1]
     accp, _ = _pad_to(acc, Mp)
-    out = _otaf.ota_fold_2d(accp, qp, scale, w, gains=gains, qblock=qblock,
-                            packed4=packed4, interpret=interpret)
+    out = _otaf.ota_fold_2d(
+        accp,
+        qp,
+        scale,
+        w,
+        gains=gains,
+        qblock=qblock,
+        packed4=packed4,
+        interpret=interpret,
+    )
     return out[:M]
 
 
@@ -203,8 +240,9 @@ def qmatmul(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray
 
 
 @functools.partial(jax.jit, static_argnames=("causal",))
-def flash_mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-              causal: bool = True) -> jnp.ndarray:
+def flash_mha(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool = True
+) -> jnp.ndarray:
     """Multi-head flash attention. q: (B, S, H, D); k/v: (B, S, KV, D).
 
     GQA handled by repeating KV heads to H (zero-copy broadcast reshape);
@@ -230,8 +268,7 @@ def flash_mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     qf = qf.swapaxes(1, 2).reshape(B * H, Sq + pad_q, D)
     kf = kf.swapaxes(1, 2).reshape(B * H, Sk + pad_k, D)
     vf = vf.swapaxes(1, 2).reshape(B * H, Sk + pad_k, D)
-    out = _fa.flash_attention(qf, kf, vf, causal=causal,
-                              interpret=_on_cpu())
+    out = _fa.flash_attention(qf, kf, vf, causal=causal, interpret=_on_cpu())
     out = out.reshape(B, H, Sq + pad_q, D).swapaxes(1, 2)
     return out[:, :Sq]
 
@@ -292,8 +329,7 @@ def pack_int4_rows(q: jnp.ndarray) -> jnp.ndarray:
     return (lo | (hi << 4)).astype(jnp.uint8)
 
 
-def unpack_int4_rows(packed: jnp.ndarray,
-                     n: Optional[int] = None) -> jnp.ndarray:
+def unpack_int4_rows(packed: jnp.ndarray, n: Optional[int] = None) -> jnp.ndarray:
     """Inverse of ``pack_int4_rows``: (..., P) uint8 -> (..., n) int8.
 
     ``n`` trims the trailing pad symbol of an odd-length row (defaults to
@@ -314,7 +350,8 @@ def quantize_weights_int4(w: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 @jax.jit
-def qmatmul_int4(x: jnp.ndarray, w_packed: jnp.ndarray,
-                 scale: jnp.ndarray) -> jnp.ndarray:
+def qmatmul_int4(
+    x: jnp.ndarray, w_packed: jnp.ndarray, scale: jnp.ndarray
+) -> jnp.ndarray:
     """x (M, K) @ dequant(int4-packed weights (K//2, N))."""
     return qmatmul(x, unpack_int4(w_packed), scale)

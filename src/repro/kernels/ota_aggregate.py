@@ -29,9 +29,14 @@ def _ota_kernel(w_ref, std_ref, x_ref, noise_ref, o_ref):
     o_ref[...] = (acc + std_ref[0, 0] * noise_ref[...]).reshape(o_ref.shape)
 
 
-def ota_aggregate_2d(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
-                     noise_std: jnp.ndarray, *,
-                     interpret: bool = False) -> jnp.ndarray:
+def ota_aggregate_2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    noise: jnp.ndarray,
+    noise_std: jnp.ndarray,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
     """x: (K, M) with M % BLOCK_COLS == 0; w: (K,); noise: (M,)."""
     K, M = x.shape
     assert M % BLOCK_COLS == 0, M

@@ -71,8 +71,7 @@ def sr_dither(seed, rows, pos) -> jnp.ndarray:
     h = h ^ (h >> jnp.uint32(13))
     h = h * jnp.uint32(0xC2B2AE35)
     h = h ^ (h >> jnp.uint32(16))
-    return (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(
-        1.0 / (1 << 24))
+    return (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
 
 def _fused_kernel(seed_ref, scale_ref, qmax_ref, w_ref, x_ref, o_ref, ss_ref):
@@ -84,8 +83,10 @@ def _fused_kernel(seed_ref, scale_ref, qmax_ref, w_ref, x_ref, o_ref, ss_ref):
     w = w_ref[...].astype(jnp.float32)          # (K, 1)
 
     rows = jax.lax.broadcasted_iota(jnp.uint32, (K, B), 0)
-    pos = jax.lax.broadcasted_iota(jnp.uint32, (K, B), 1) + \
-        i.astype(jnp.uint32) * jnp.uint32(B)
+    pos = (
+        jax.lax.broadcasted_iota(jnp.uint32, (K, B), 1)
+        + i.astype(jnp.uint32) * jnp.uint32(B)
+    )
     u = sr_dither(seed_ref[0, 0], rows, pos)
 
     scaled = x / scale
@@ -114,8 +115,7 @@ def _unpack_nibbles(p: jnp.ndarray) -> jnp.ndarray:
     hi = ((p >> jnp.uint8(4)) & jnp.uint8(0x0F)).astype(jnp.int8)
     lo = jnp.where(lo >= 8, lo - 16, lo)
     hi = jnp.where(hi >= 8, hi - 16, hi)
-    return jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1],
-                                                2 * p.shape[-1])
+    return jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], 2 * p.shape[-1])
 
 
 def _tile_scale_cols(scale_ref, i, K, B, qblock, aligned):
@@ -163,8 +163,9 @@ def _row_coeff(w_ref, g_ref):
     return w
 
 
-def _dq_superpose_kernel(scale_ref, w_ref, *refs, qblock=0, aligned=False,
-                         gained=False):
+def _dq_superpose_kernel(
+    scale_ref, w_ref, *refs, qblock=0, aligned=False, gained=False
+):
     """Dequantize pre-quantized rows and superpose: acc = sum_k w_k s_k q_k
     (times the per-row channel gain g_k in the gain-aware variant).
 
@@ -183,12 +184,12 @@ def _dq_superpose_kernel(scale_ref, w_ref, *refs, qblock=0, aligned=False,
     K, B = q_ref.shape
     scale = _tile_scale_cols(scale_ref, i, K, B, qblock, aligned)
     dq = q_ref[...].astype(jnp.float32) * scale
-    o_ref[...] = jnp.sum(dq * _row_coeff(w_ref, g_ref),
-                         axis=0).reshape(o_ref.shape)
+    o_ref[...] = jnp.sum(dq * _row_coeff(w_ref, g_ref), axis=0).reshape(o_ref.shape)
 
 
-def _dq_superpose_int4_kernel(scale_ref, w_ref, *refs, qblock=0,
-                              aligned=False, gained=False):
+def _dq_superpose_int4_kernel(
+    scale_ref, w_ref, *refs, qblock=0, aligned=False, gained=False
+):
     """int4 variant: unpack two symbols per byte in-VMEM, then dequant+sum.
 
     p_ref: (K, B//2) uint8 tile of row-major packed nibbles; the HBM read
@@ -202,12 +203,12 @@ def _dq_superpose_int4_kernel(scale_ref, w_ref, *refs, qblock=0,
     K, B = q.shape
     scale = _tile_scale_cols(scale_ref, i, K, B, qblock, aligned)
     dq = q.astype(jnp.float32) * scale
-    o_ref[...] = jnp.sum(dq * _row_coeff(w_ref, g_ref),
-                         axis=0).reshape(o_ref.shape)
+    o_ref[...] = jnp.sum(dq * _row_coeff(w_ref, g_ref), axis=0).reshape(o_ref.shape)
 
 
-def _fold_superpose_kernel(scale_ref, w_ref, *refs, qblock=0, aligned=False,
-                           gained=False):
+def _fold_superpose_kernel(
+    scale_ref, w_ref, *refs, qblock=0, aligned=False, gained=False
+):
     """Streaming fold: out = acc + sum_k w_k s_k q_k (DESIGN.md §11).
 
     The persistent-accumulator variant of ``_dq_superpose_kernel``: the
@@ -221,8 +222,7 @@ def _fold_superpose_kernel(scale_ref, w_ref, *refs, qblock=0, aligned=False,
     (``_row_coeff``) — a wave of all-truncated rows (every g_k = 0)
     adds exact zeros and leaves the accumulator value unchanged.
     """
-    g_ref, (q_ref, acc_ref, o_ref) = \
-        (refs[0], refs[1:]) if gained else (None, refs)
+    g_ref, (q_ref, acc_ref, o_ref) = (refs[0], refs[1:]) if gained else (None, refs)
     i = pl.program_id(0)
     K, B = q_ref.shape
     scale = _tile_scale_cols(scale_ref, i, K, B, qblock, aligned)
@@ -231,11 +231,11 @@ def _fold_superpose_kernel(scale_ref, w_ref, *refs, qblock=0, aligned=False,
     o_ref[...] = acc_ref[...] + part.reshape(o_ref.shape)
 
 
-def _fold_superpose_int4_kernel(scale_ref, w_ref, *refs, qblock=0,
-                                aligned=False, gained=False):
+def _fold_superpose_int4_kernel(
+    scale_ref, w_ref, *refs, qblock=0, aligned=False, gained=False
+):
     """int4 fold variant: in-VMEM nibble unpack, then fold into acc."""
-    g_ref, (p_ref, acc_ref, o_ref) = \
-        (refs[0], refs[1:]) if gained else (None, refs)
+    g_ref, (p_ref, acc_ref, o_ref) = (refs[0], refs[1:]) if gained else (None, refs)
     i = pl.program_id(0)
     q = _unpack_nibbles(p_ref[...])
     K, B = q.shape
@@ -276,17 +276,25 @@ def _packed_specs(q, scale, *, qblock, packed4):
         bpt = BLOCK_COLS // qblock  # blocks per tile
         need = grid[0] * bpt
         if n_blocks < need:
-            scales = jnp.pad(scales, ((0, 0), (0, need - n_blocks)),
-                             constant_values=1.0)
+            scales = jnp.pad(
+                scales, ((0, 0), (0, need - n_blocks)), constant_values=1.0
+            )
         smat = pl.BlockSpec((K, bpt), lambda i: (0, i))
     else:
         smat = pl.BlockSpec((K, n_blocks), lambda i: (0, 0))
     return M, grid, aligned, scales, smat, col, tile
 
 
-def ota_packed_2d(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
-                  gains=None, qblock: int = 0, packed4: bool = False,
-                  interpret: bool = False):
+def ota_packed_2d(
+    q: jnp.ndarray,
+    scale: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    gains=None,
+    qblock: int = 0,
+    packed4: bool = False,
+    interpret: bool = False,
+):
     """Dequant + weighted superpose of quantized client rows.
 
     q: (K, M) int8/int16/f32 symbols, or (K, M//2) uint8 when ``packed4``
@@ -304,7 +312,8 @@ def ota_packed_2d(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
     """
     K = q.shape[0]
     M, grid, aligned, scales, smat, col, tile = _packed_specs(
-        q, scale, qblock=qblock, packed4=packed4)
+        q, scale, qblock=qblock, packed4=packed4
+    )
     body = _dq_superpose_int4_kernel if packed4 else _dq_superpose_kernel
     gained = gains is not None
     in_specs = [smat, col] + ([col] if gained else []) + [tile]
@@ -313,8 +322,7 @@ def ota_packed_2d(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
         operands.append(jnp.asarray(gains).reshape(K, 1).astype(jnp.float32))
     operands.append(q)
     return pl.pallas_call(
-        functools.partial(body, qblock=qblock, aligned=aligned,
-                          gained=gained),
+        functools.partial(body, qblock=qblock, aligned=aligned, gained=gained),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((BLOCK_COLS,), lambda i: (i,)),
@@ -323,9 +331,17 @@ def ota_packed_2d(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
     )(*operands)
 
 
-def ota_fold_2d(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
-                w: jnp.ndarray, *, gains=None, qblock: int = 0,
-                packed4: bool = False, interpret: bool = False):
+def ota_fold_2d(
+    acc: jnp.ndarray,
+    q: jnp.ndarray,
+    scale: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    gains=None,
+    qblock: int = 0,
+    packed4: bool = False,
+    interpret: bool = False,
+):
     """Fold one packed micro-batch into a persistent (M,) accumulator.
 
     Same contract as ``ota_packed_2d`` plus ``acc``: the running
@@ -339,10 +355,10 @@ def ota_fold_2d(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
     """
     K = q.shape[0]
     M, grid, aligned, scales, smat, col, tile = _packed_specs(
-        q, scale, qblock=qblock, packed4=packed4)
+        q, scale, qblock=qblock, packed4=packed4
+    )
     assert acc.shape == (M,), (acc.shape, M)
-    body = (_fold_superpose_int4_kernel if packed4
-            else _fold_superpose_kernel)
+    body = _fold_superpose_int4_kernel if packed4 else _fold_superpose_kernel
     gained = gains is not None
     acc_spec = pl.BlockSpec((BLOCK_COLS,), lambda i: (i,))
     in_specs = [smat, col] + ([col] if gained else []) + [tile, acc_spec]
@@ -351,8 +367,7 @@ def ota_fold_2d(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
         operands.append(jnp.asarray(gains).reshape(K, 1).astype(jnp.float32))
     operands.extend([q, acc.astype(jnp.float32)])
     return pl.pallas_call(
-        functools.partial(body, qblock=qblock, aligned=aligned,
-                          gained=gained),
+        functools.partial(body, qblock=qblock, aligned=aligned, gained=gained),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((BLOCK_COLS,), lambda i: (i,)),
@@ -361,9 +376,15 @@ def ota_fold_2d(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
     )(*operands)
 
 
-def ota_fused_2d(x: jnp.ndarray, scale: jnp.ndarray, qmax: jnp.ndarray,
-                 w: jnp.ndarray, seed: jnp.ndarray, *,
-                 interpret: bool = False):
+def ota_fused_2d(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    qmax: jnp.ndarray,
+    w: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    interpret: bool = False,
+):
     """x: (K, M) with M % BLOCK_COLS == 0; scale/qmax/w: (K,); seed: ().
 
     Returns (acc (M,) f32, sumsq (1, 1) f32) — the pre-noise aggregate and
@@ -388,8 +409,10 @@ def ota_fused_2d(x: jnp.ndarray, scale: jnp.ndarray, qmax: jnp.ndarray,
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(seed.reshape(1, 1).astype(jnp.uint32),
-      scale.reshape(K, 1).astype(jnp.float32),
-      qmax.reshape(K, 1).astype(jnp.float32),
-      w.reshape(K, 1).astype(jnp.float32),
-      x)
+    )(
+        seed.reshape(1, 1).astype(jnp.uint32),
+        scale.reshape(K, 1).astype(jnp.float32),
+        qmax.reshape(K, 1).astype(jnp.float32),
+        w.reshape(K, 1).astype(jnp.float32),
+        x,
+    )

@@ -27,11 +27,11 @@ def _qmm_kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, n_k: int):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...].astype(jnp.float32)          # (BM, BK)
-    w = w_ref[...].astype(jnp.float32)          # (BK, BN) int8 -> f32
+    x = x_ref[...].astype(jnp.float32)  # (BM, BK)
+    w = w_ref[...].astype(jnp.float32)  # (BK, BN) int8 -> f32
     acc_ref[...] += jax.lax.dot_general(
-        x, w, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _done():
@@ -39,8 +39,9 @@ def _qmm_kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = (acc_ref[...] * scale).astype(o_ref.dtype)
 
 
-def qmatmul(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray, *,
-            interpret: bool = False) -> jnp.ndarray:
+def qmatmul(
+    x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray, *, interpret: bool = False
+) -> jnp.ndarray:
     """x: (M, K); w_q: (K, N) int8; scale: (N,) f32. M,K,N % 128 == 0."""
     M, K = x.shape
     K2, N = w_q.shape

@@ -39,9 +39,14 @@ def _fq_stoch_kernel(scale_ref, x_ref, noise_ref, o_ref, *, qmax: float):
     o_ref[...] = (q * scale).astype(o_ref.dtype)
 
 
-def fake_quant_2d(x: jnp.ndarray, scale: jnp.ndarray, bits: int,
-                  noise: Optional[jnp.ndarray] = None, *,
-                  interpret: bool = False) -> jnp.ndarray:
+def fake_quant_2d(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    bits: int,
+    noise: Optional[jnp.ndarray] = None,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
     """x: (M, 128k) 2-D, M % BLOCK_ROWS == 0. scale: () f32."""
     M, N = x.shape
     assert M % BLOCK_ROWS == 0 and N % LANES == 0, (M, N)

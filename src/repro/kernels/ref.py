@@ -13,8 +13,9 @@ import jax.numpy as jnp
 from repro.core.quant import qrange
 
 
-def fake_quant_ref(x: jnp.ndarray, scale: jnp.ndarray, bits: int,
-                   noise: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+def fake_quant_ref(
+    x: jnp.ndarray, scale: jnp.ndarray, bits: int, noise: Optional[jnp.ndarray] = None
+) -> jnp.ndarray:
     """Fake-quantize with a precomputed per-tensor scale.
 
     noise: optional uniform [0,1) array (stochastic rounding); None = RTN.
@@ -30,8 +31,13 @@ def fake_quant_ref(x: jnp.ndarray, scale: jnp.ndarray, bits: int,
     return q * scale
 
 
-def ota_fused_ref(x: jnp.ndarray, scale: jnp.ndarray, qmax: jnp.ndarray,
-                  w: jnp.ndarray, seed: jnp.ndarray):
+def ota_fused_ref(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    qmax: jnp.ndarray,
+    w: jnp.ndarray,
+    seed: jnp.ndarray,
+):
     """Oracle for the fused OTA data-plane kernel (see ota_fused.py).
 
     x: (K, M); scale/qmax/w: (K,); seed: () uint32 for the positional
@@ -48,9 +54,11 @@ def ota_fused_ref(x: jnp.ndarray, scale: jnp.ndarray, qmax: jnp.ndarray,
     scale = scale.reshape(-1, 1).astype(jnp.float32)
     qmax = qmax.reshape(-1, 1).astype(jnp.float32)
     w = w.reshape(-1, 1).astype(jnp.float32)
-    u = sr_dither(jnp.asarray(seed),
-                  jax.lax.broadcasted_iota(jnp.uint32, (K, M), 0),
-                  jax.lax.broadcasted_iota(jnp.uint32, (K, M), 1))
+    u = sr_dither(
+        jnp.asarray(seed),
+        jax.lax.broadcasted_iota(jnp.uint32, (K, M), 0),
+        jax.lax.broadcasted_iota(jnp.uint32, (K, M), 1),
+    )
     scaled = x / scale
     floor = jnp.floor(scaled)
     q = floor + (u < (scaled - floor)).astype(jnp.float32)
@@ -60,9 +68,15 @@ def ota_fused_ref(x: jnp.ndarray, scale: jnp.ndarray, qmax: jnp.ndarray,
     return acc, jnp.sum(acc * acc)
 
 
-def ota_packed_ref(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
-                   gains: Optional[jnp.ndarray] = None, qblock: int = 0,
-                   packed4: bool = False) -> jnp.ndarray:
+def ota_packed_ref(
+    q: jnp.ndarray,
+    scale: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    gains: Optional[jnp.ndarray] = None,
+    qblock: int = 0,
+    packed4: bool = False,
+) -> jnp.ndarray:
     """Oracle for the packed-uplink dequant+superpose kernel
     (``ota_fused.ota_packed_2d``).
 
@@ -100,9 +114,16 @@ def ota_packed_ref(q: jnp.ndarray, scale: jnp.ndarray, w: jnp.ndarray, *,
     return jnp.sum(dq * wcol, axis=0)
 
 
-def ota_fold_ref(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
-                 w: jnp.ndarray, *, gains: Optional[jnp.ndarray] = None,
-                 qblock: int = 0, packed4: bool = False) -> jnp.ndarray:
+def ota_fold_ref(
+    acc: jnp.ndarray,
+    q: jnp.ndarray,
+    scale: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    gains: Optional[jnp.ndarray] = None,
+    qblock: int = 0,
+    packed4: bool = False,
+) -> jnp.ndarray:
     """Oracle for the streaming fold kernel (``ota_fused.ota_fold_2d``).
 
     acc: the running (M,) f32 superposition state; remaining args as in
@@ -115,21 +136,26 @@ def ota_fold_ref(acc: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
     the accumulator value is unchanged.
     """
     return acc.astype(jnp.float32) + ota_packed_ref(
-        q, scale, w, gains=gains, qblock=qblock, packed4=packed4)
+        q, scale, w, gains=gains, qblock=qblock, packed4=packed4
+    )
 
 
-def ota_aggregate_ref(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
-                      noise_std: jnp.ndarray) -> jnp.ndarray:
+def ota_aggregate_ref(
+    x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray, noise_std: jnp.ndarray
+) -> jnp.ndarray:
     """Superpose K client streams: sum_k w_k x_k + noise_std * noise.
 
     x: (K, M) f32; w: (K,) f32; noise: (M,) f32.
     """
-    return jnp.einsum("k,km->m", w.astype(jnp.float32),
-                      x.astype(jnp.float32)) + noise_std * noise
+    return (
+        jnp.einsum("k,km->m", w.astype(jnp.float32), x.astype(jnp.float32))
+        + noise_std * noise
+    )
 
 
-def topk_similarity_ref(qm: jnp.ndarray, recs: jnp.ndarray,
-                        scales: Optional[jnp.ndarray], n: jnp.ndarray):
+def topk_similarity_ref(
+    qm: jnp.ndarray, recs: jnp.ndarray, scales: Optional[jnp.ndarray], n: jnp.ndarray
+):
     """Oracle for the fused similarity/top-k kernel
     (``topk_similarity.topk_similarity_2d``) — the identical tile loop
     (dot -> live-count mask -> running ``lax.top_k`` merge) unrolled in
@@ -149,15 +175,16 @@ def topk_similarity_ref(qm: jnp.ndarray, recs: jnp.ndarray,
     scores = jnp.full((Qp, TOPK_LANES), -jnp.inf, jnp.float32)
     idx = jnp.zeros((Qp, TOPK_LANES), jnp.int32)
     for i in range(Np // TILE_N):
-        rec = recs[i * TILE_N:(i + 1) * TILE_N]
+        rec = recs[i * TILE_N : (i + 1) * TILE_N]
         if scales is not None:
             qblock = D // scales.shape[1]
             rec = rec.astype(jnp.float32) * jnp.repeat(
-                scales[i * TILE_N:(i + 1) * TILE_N].astype(jnp.float32),
-                qblock, axis=1)
+                scales[i * TILE_N : (i + 1) * TILE_N].astype(jnp.float32),
+                qblock,
+                axis=1,
+            )
         s = jnp.dot(qm, rec.T, preferred_element_type=jnp.float32)
-        pos = jax.lax.broadcasted_iota(jnp.int32, (Qp, TILE_N), 1) + \
-            i * TILE_N
+        pos = jax.lax.broadcasted_iota(jnp.int32, (Qp, TILE_N), 1) + i * TILE_N
         s = jnp.where(pos < n, s, -jnp.inf)
         cand_s = jnp.concatenate([scores, s], axis=1)
         cand_i = jnp.concatenate([idx, pos], axis=1)
@@ -167,23 +194,24 @@ def topk_similarity_ref(qm: jnp.ndarray, recs: jnp.ndarray,
     return scores, idx
 
 
-def qmatmul_ref(x: jnp.ndarray, w_q: jnp.ndarray,
-                scale: jnp.ndarray) -> jnp.ndarray:
+def qmatmul_ref(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     """x (M, K) f32/bf16 @ dequant(w_q (K, N) int8, scale (N,)) -> (M, N) f32."""
     w = w_q.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]
     return x.astype(jnp.float32) @ w
 
 
-def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                        causal: bool = True) -> jnp.ndarray:
+def flash_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = True
+) -> jnp.ndarray:
     """Naive softmax attention. q: (BH, Sq, D); k/v: (BH, Sk, D)."""
     D = q.shape[-1]
-    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) * D ** -0.5
+    s = (
+        jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+        * D**-0.5
+    )
     if causal:
         Sq, Sk = q.shape[1], k.shape[1]
         mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
         s = jnp.where(mask[None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bqk,bkd->bqd", p,
-                      v.astype(jnp.float32)).astype(q.dtype)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

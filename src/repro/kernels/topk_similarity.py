@@ -69,13 +69,13 @@ def _topk_f32_kernel(n_ref, q_ref, r_ref, score_ref, idx_ref):
     _merge_topk(score_ref, idx_ref, s, pos, i)
 
 
-def _topk_int8_kernel(n_ref, q_ref, r_ref, s_ref, score_ref, idx_ref, *,
-                      qblock):
+def _topk_int8_kernel(n_ref, q_ref, r_ref, s_ref, score_ref, idx_ref, *, qblock):
     """int8 variant: dequantize the record tile in-VMEM from its blockwise
     scale slice (``qblock`` dims per scale, the arena storage class)."""
     i = pl.program_id(0)
     rec = r_ref[...].astype(jnp.float32) * jnp.repeat(
-        s_ref[...].astype(jnp.float32), qblock, axis=1)
+        s_ref[...].astype(jnp.float32), qblock, axis=1
+    )
     s, pos = _tile_scores(q_ref[...], rec, i, n_ref[0, 0])
     _merge_topk(score_ref, idx_ref, s, pos, i)
 

@@ -1,0 +1,133 @@
+"""Telemetry export: JSONL event sink, summary rollup, and the shared
+benchmark-report writer (DESIGN.md §14).
+
+Three consumers, one format each:
+
+- :class:`JsonlSink` — append-only JSON-lines event stream (one object
+  per line: ``{"ts": <unix seconds>, "kind": ..., "name": ..., ...}``).
+  ``dump_telemetry`` writes the current metrics registry + span summary
+  through it — the machine-readable round ledger CI uploads as an
+  artifact next to the Perfetto trace.
+- :func:`summary` — one nested dict snapshot (metrics + per-span
+  rollup), the payload benches embed in their JSON reports.
+- :func:`write_bench_report` / :func:`write_all_bench_reports` — the
+  single ``BENCH_<name>.json`` writer every benchmark shares.
+  ``benchmarks/run.py --json`` used to copy-paste the open/dump/print
+  loop per bench; now each bench only supplies a ``json_report()``
+  payload and registers in :data:`BENCH_REPORTS`.
+"""
+
+from __future__ import annotations
+
+import importlib
+import json
+import time
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
+
+class JsonlSink:
+    """Append-only JSONL event sink (one JSON object per line)."""
+
+    def __init__(self, path: str, *, clock=time.time):
+        self.path = path
+        self._clock = clock
+        self._f = open(path, "a")
+
+    def emit(self, kind: str, name: str, **fields: Any) -> None:
+        rec = {"ts": self._clock(), "kind": kind, "name": name}
+        rec.update(fields)
+        self._f.write(json.dumps(rec, sort_keys=True))
+        self._f.write("\n")
+
+    def close(self) -> None:
+        self._f.close()
+
+    def __enter__(self) -> "JsonlSink":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+
+def summary(
+    *,
+    registry: Optional[_metrics.Registry] = None,
+    tracer: Optional[_trace.Tracer] = None,
+) -> Dict[str, Any]:
+    """One snapshot dict: metrics registry + per-span-name rollup."""
+    registry = registry or _metrics.REGISTRY
+    tracer = tracer or _trace.get_tracer()
+    return {"metrics": registry.snapshot(), "spans": tracer.summary()}
+
+
+def dump_telemetry(
+    jsonl_path: str,
+    trace_path: Optional[str] = None,
+    *,
+    registry: Optional[_metrics.Registry] = None,
+    tracer: Optional[_trace.Tracer] = None,
+) -> Dict[str, Any]:
+    """Flush current telemetry to disk; returns the summary written.
+
+    Each metric series becomes one JSONL event (``kind`` = counter /
+    gauge / histogram, ``value`` the float or the {count,total,min,max}
+    dict), each span name one ``kind: "span"`` rollup line. With
+    ``trace_path`` the full Perfetto ``trace_event`` JSON is written
+    too (``Tracer.export_perfetto``).
+    """
+    s = summary(registry=registry, tracer=tracer)
+    with JsonlSink(jsonl_path) as sink:
+        for kind in ("counters", "gauges", "histograms"):
+            for name, value in sorted(s["metrics"][kind].items()):
+                sink.emit(kind[:-1], name, value=value)
+        for name, roll in sorted(s["spans"].items()):
+            sink.emit("span", name, **roll)
+    if trace_path is not None:
+        (tracer or _trace.get_tracer()).export_perfetto(trace_path)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# shared benchmark report path (benchmarks/run.py --json)
+# ---------------------------------------------------------------------------
+
+# every bench exposing json_report(), in run order. The module paths are
+# imported lazily (write_all_bench_reports) so repro.obs never imports
+# the benchmarks package at module load.
+BENCH_REPORTS: Sequence[str] = (
+    "aggregation",
+    "retrieval",
+    "streaming",
+    "channel",
+    "satisfaction",
+    "strategies",
+    "obs",
+)
+
+
+def write_bench_report(
+    name: str, payload: Dict[str, Any], directory: str = "."
+) -> str:
+    """Write one ``BENCH_<name>.json`` (sorted, indented, newline-
+    terminated — the established report shape) and return its path."""
+    path = f"{directory}/BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+    return path
+
+
+def write_all_bench_reports(
+    names: Optional[Iterable[str]] = None, directory: str = "."
+) -> List[str]:
+    """Import each bench in ``names`` (default: all of BENCH_REPORTS),
+    call its ``json_report()``, and write the shared report file."""
+    paths = []
+    for name in names if names is not None else BENCH_REPORTS:
+        mod = importlib.import_module(f"benchmarks.bench_{name}")
+        paths.append(write_bench_report(name, mod.json_report(), directory))
+    return paths

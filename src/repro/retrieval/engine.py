@@ -26,6 +26,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.retrieval.arena import ArenaStore
 
 # int8 stores dequantize in row chunks of this size on the numpy path so
@@ -109,14 +110,17 @@ class RetrievalEngine:
         k = min(k, n)
         if n == 0 or k <= 0 or q == 0:
             return np.zeros((q, 0), np.float32), np.zeros((q, 0), np.int32)
-        use_kernel = self.use_kernel
-        if use_kernel is None:
-            use_kernel = _default_use_kernel()
-        from repro.kernels.topk_similarity import TOPK_LANES
+        with obs.span("retrieval.query", q=q, k=k, rows=n):
+            obs.metrics.inc("retrieval.queries", q)
+            obs.metrics.inc("retrieval.query_rows", q * n)
+            use_kernel = self.use_kernel
+            if use_kernel is None:
+                use_kernel = _default_use_kernel()
+            from repro.kernels.topk_similarity import TOPK_LANES
 
-        if use_kernel and k <= TOPK_LANES:
-            return self._topk_jax(queries, k)
-        return self._topk_numpy(queries, k)
+            if use_kernel and k <= TOPK_LANES:
+                return self._topk_jax(queries, k)
+            return self._topk_numpy(queries, k)
 
     def _topk_numpy(self, queries, k):
         store = self.store

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ArchConfig
 from repro.models.registry import build_model
 
@@ -119,11 +120,12 @@ class ServeEngine:
             # prefill by stepping the prompt through the decode path token
             # by token for this slot (keeps one compiled step; a batched
             # prefill fast-path is the documented optimisation).
-            for t, tok in enumerate(req.prompt):
-                self.next_token[slot] = tok
-                self.slot_pos[slot] = t
-                logits, self.cache = self._decode(self.params, self.cache,
-                                                  self._batch())
+            with obs.span("serve.prefill", slot=slot, tokens=len(req.prompt)):
+                for t, tok in enumerate(req.prompt):
+                    self.next_token[slot] = tok
+                    self.slot_pos[slot] = t
+                    logits, self.cache = self._decode(self.params, self.cache,
+                                                      self._batch())
             first = int(jnp.argmax(logits[slot]))
             req.generated.append(first)
             self.next_token[slot] = first
@@ -145,10 +147,13 @@ class ServeEngine:
         active = [s for s in range(self.max_batch) if self.slots[s]]
         if not active:
             return 0
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          self._batch())
+        with obs.span("serve.decode", active=len(active)):
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              self._batch())
         toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self.steps += 1
+        obs.metrics.inc("serve.decode_steps")
+        obs.metrics.inc("serve.tokens", len(active))
         for s in active:
             req = self.slots[s]
             tok = int(toks[s])

@@ -1,0 +1,285 @@
+"""Telemetry layer (DESIGN.md §14): span tracer semantics (nesting,
+disabled no-op, Perfetto export), the metrics registry (labels,
+histograms, reset), the jit-retrace counter's regression guard, and the
+instrumented round loop's acceptance properties — FLServer and
+StreamingFLServer emit the same span names, the metrics byte counters
+agree bit-for-bit with the ``RoundLog`` that fed them, and a disabled
+tracer leaves round outputs byte-identical."""
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.configs.base import FLConfig
+from repro.core import ota, packing
+from repro.fl import FLServer, StreamingFLServer
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+
+def test_nested_span_order_and_depth():
+    with obs.enabled() as t:
+        with obs.span("outer", tag=1):
+            with obs.span("inner"):
+                pass
+            with obs.span("inner"):
+                pass
+    evs = t.events
+    # children record on exit, before their parent
+    assert [e.name for e in evs] == ["inner", "inner", "outer"]
+    outer = evs[-1]
+    assert outer.depth == 0 and outer.args == {"tag": 1}
+    for inner in evs[:2]:
+        assert inner.depth == 1
+        # interval containment: the Perfetto nesting invariant
+        assert inner.ts_us >= outer.ts_us
+        assert inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us + 1e-3
+
+
+def test_disabled_tracer_records_nothing():
+    t = obs.get_tracer()
+    t.reset()
+    assert not obs.is_enabled()
+    # the disabled fast path returns the shared no-op singleton:
+    # no allocation, no clock read, nothing recorded
+    s = obs.span("anything", k=1)
+    assert s is obs.NULL_SPAN
+    with s:
+        pass
+    assert t.events == [] and t.span_names() == set()
+
+
+def test_span_dropped_if_disabled_mid_flight():
+    t = obs.get_tracer()
+    with obs.enabled():
+        s = obs.span("doomed")
+        with s:
+            t.disable()
+        t.enable()
+    assert "doomed" not in t.span_names()
+
+
+def test_enabled_restores_prior_state():
+    assert not obs.is_enabled()
+    with obs.enabled():
+        assert obs.is_enabled()
+        with obs.disabled():
+            assert not obs.is_enabled()
+        assert obs.is_enabled()
+    assert not obs.is_enabled()
+
+
+def test_traced_decorator():
+    calls = []
+
+    @obs.traced("deco.fn")
+    def fn(x):
+        calls.append(x)
+        return x + 1
+
+    assert fn(1) == 2  # disabled: plain passthrough
+    with obs.enabled() as t:
+        assert fn(2) == 3
+        assert t.summary()["deco.fn"]["count"] == 1
+    assert calls == [1, 2]
+
+
+def test_perfetto_export_roundtrips():
+    with obs.enabled() as t:
+        with obs.span("a", k=3):
+            with obs.span("b"):
+                pass
+    doc = json.loads(t.export_perfetto())
+    evs = doc["traceEvents"]
+    assert len(evs) == 2
+    for ev in evs:
+        for key in ("name", "ph", "ts", "dur", "pid", "tid", "cat"):
+            assert key in ev
+        assert ev["ph"] == "X"
+    # sorted by start time: parent first in the export
+    assert [e["name"] for e in evs] == ["a", "b"]
+    assert evs[0]["args"] == {"k": 3}
+
+
+def test_perfetto_export_writes_file(tmp_path):
+    with obs.enabled() as t:
+        with obs.span("x"):
+            pass
+    path = tmp_path / "trace.json"
+    text = t.export_perfetto(str(path))
+    assert json.loads(path.read_text()) == json.loads(text)
+
+
+def test_spans_keep_their_thread_id():
+    with obs.enabled() as t:
+        with obs.span("main_thread"):
+            pass
+        # record a span wholly on the worker thread
+        def work():
+            with t.span("worker"):
+                pass
+        th = threading.Thread(target=work)
+        th.start()
+        th.join()
+    tids = {e.name: e.tid for e in t.events}
+    assert tids["main_thread"] != tids["worker"]
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_counters_gauges_histograms():
+    r = obs.metrics.Registry()
+    r.inc("c")
+    r.inc("c", 2.5)
+    r.set_gauge("g", 7.0)
+    r.set_gauge("g", 8.0)  # last write wins
+    for v in (1.0, 3.0, 2.0):
+        r.observe("h", v)
+    snap = r.snapshot()
+    assert snap["counters"]["c"] == 3.5
+    assert snap["gauges"]["g"] == 8.0
+    h = snap["histograms"]["h"]
+    assert h == {"count": 3, "total": 6.0, "min": 1.0, "max": 3.0}
+    r.reset()
+    assert r.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+def test_registry_labels_make_distinct_series():
+    r = obs.metrics.Registry()
+    r.inc("rows", 2, kind="int4")
+    r.inc("rows", 3, kind="f32")
+    r.inc("rows", 1, kind="int4")
+    snap = r.snapshot()["counters"]
+    assert snap["rows{kind=int4}"] == 3
+    assert snap["rows{kind=f32}"] == 3
+    assert r.get("rows", kind="int4") == 3
+
+
+def test_jsonl_sink_and_dump(tmp_path):
+    r = obs.metrics.Registry()
+    r.inc("fl.uplink_bytes", 128)
+    with obs.enabled() as t:
+        with obs.span("round"):
+            pass
+    jsonl = tmp_path / "events.jsonl"
+    trace = tmp_path / "trace.json"
+    s = obs.export.dump_telemetry(str(jsonl), str(trace), registry=r,
+                                  tracer=t)
+    lines = [json.loads(ln) for ln in jsonl.read_text().splitlines()]
+    kinds = {(ln["kind"], ln["name"]) for ln in lines}
+    assert ("counter", "fl.uplink_bytes") in kinds
+    assert ("span", "round") in kinds
+    assert s["metrics"]["counters"]["fl.uplink_bytes"] == 128
+    assert json.loads(trace.read_text())["traceEvents"]
+
+
+# ---------------------------------------------------------------------------
+# jit-retrace regression guard
+# ---------------------------------------------------------------------------
+
+
+def _packed_round(key, seed):
+    """One mixed-bit packed aggregation round (fresh values, same shapes)."""
+    rng = np.random.RandomState(seed)
+    tree = {"w": jnp.zeros((2048,), jnp.float32)}
+    layout = packing.make_layout(tree)
+    bits = [4, 8, 16, 32]
+    sr = ota.derive_sr_seed(key)
+    rows = [
+        ota.quantize_uplink(
+            jnp.asarray(rng.randn(layout.padded_size).astype(np.float32)),
+            b, sr, i)
+        for i, b in enumerate(bits)
+    ]
+    out, _ = ota.ota_aggregate_packed(
+        key, rows, bits, [1.0, 2.0, 1.0, 3.0], layout,
+        ota.OTAConfig(snr_db=20.0))
+    jax.block_until_ready(jax.tree.leaves(out))
+
+
+def test_jit_retrace_counter_flat_on_second_round():
+    """Round 2 of an identical-composition cohort must hit the jit cache:
+    the ``jax.retraces`` counter (fed by the jax.monitoring hook) stays
+    flat — the regression guard for shape/dtype-unstable round code."""
+    _packed_round(jax.random.key(0), seed=0)  # warm every program
+    obs.metrics.reset()
+    _packed_round(jax.random.key(1), seed=1)
+    warm = obs.metrics.get("jax.retraces")
+    _packed_round(jax.random.key(2), seed=2)
+    assert obs.metrics.get("jax.retraces") == warm, (
+        "aggregation retraced on an identical cohort composition")
+
+
+# ---------------------------------------------------------------------------
+# instrumented round loop
+# ---------------------------------------------------------------------------
+
+
+def _cfg(**kw):
+    base = dict(n_clients=6, clients_per_round=3, n_rounds=2, local_steps=1,
+                local_batch=2, lr=1e-3, planner="unified", seed=0)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _run_one_round(server_cls, *, enabled):
+    ctx = obs.enabled() if enabled else obs.disabled()
+    with ctx:
+        n0 = len(obs.get_tracer().events)
+        obs.metrics.reset()
+        srv = server_cls(_cfg(), shard_size=4)
+        log = srv.run_round(0)
+        names = {e.name for e in obs.get_tracer().events[n0:]}
+        snap = obs.metrics.snapshot()
+    return srv, log, names, snap
+
+
+def test_servers_emit_same_span_names():
+    """No deadline, full fill: the streaming engine's trace is the
+    synchronous engine's trace — identical span name sets (and >= 7
+    distinct pipeline stages, the acceptance floor)."""
+    _, _, sync_names, _ = _run_one_round(FLServer, enabled=True)
+    _, _, stream_names, _ = _run_one_round(StreamingFLServer, enabled=True)
+    assert sync_names == stream_names
+    assert len(sync_names) >= 7
+    assert {"round", "plan", "client_train", "uplink_encode", "fold",
+            "finalize", "optimizer", "broadcast_encode",
+            "feedback"} <= sync_names
+
+
+def test_metrics_bytes_match_roundlog_bitwise():
+    _, log, _, snap = _run_one_round(FLServer, enabled=True)
+    assert snap["counters"]["fl.uplink_bytes"] == log.uplink_bytes
+    assert snap["counters"]["fl.downlink_bytes"] == log.downlink_bytes
+    assert snap["counters"]["ota.uplink_bytes"] == log.uplink_bytes
+    assert snap["gauges"]["fl.n_participating"] == log.n_participating
+    assert "ota.truncation_rate" in snap["gauges"]
+
+
+def test_disabled_tracer_leaves_round_byte_identical():
+    """Telemetry only observes: enabled vs disabled rounds produce
+    bit-identical params and logs (spans/metrics never fork the math)."""
+    srv_on, log_on, names_on, _ = _run_one_round(FLServer, enabled=True)
+    srv_off, log_off, names_off, _ = _run_one_round(FLServer, enabled=False)
+    assert names_on and not names_off
+    assert log_on.uplink_bytes == log_off.uplink_bytes
+    assert log_on.train_loss == log_off.train_loss
+    for a, b in zip(jax.tree.leaves(srv_on.params),
+                    jax.tree.leaves(srv_off.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stream_round_log_publishes_stream_metrics():
+    _, log, _, snap = _run_one_round(StreamingFLServer, enabled=True)
+    assert snap["counters"]["stream.on_time"] == log.n_on_time
+    assert snap["counters"]["stream.lost"] == log.n_lost
+    assert snap["gauges"]["stream.sim_seconds"] == log.sim_seconds
