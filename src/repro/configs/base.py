@@ -252,6 +252,12 @@ class FLConfig:
     # symbols) and every client reconstructs bit-identical params.
     downlink_bits: int = 32
     downlink_block: int = QUANT_BLOCK
+    # mesh-sharded data planes (DESIGN.md §15): shard the OTA fold's
+    # symbol axis over the ``data`` axis of a 1-D device mesh
+    # (launch/mesh.make_data_mesh). 0/1 = the single-host path; > 1
+    # needs that many visible jax devices and stays bit-identical to
+    # the unsharded aggregation.
+    mesh_data_shards: int = 0
     # robustness options
     dropout_prob: float = 0.0   # straggler/device dropout per round
     fedprox_mu: float = 0.0     # proximal term pulling local weights to global

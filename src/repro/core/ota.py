@@ -71,6 +71,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import os
 from typing import Any, Dict, Optional, Sequence, Tuple
 
@@ -279,7 +280,172 @@ _packed_ref_jit = jax.jit(kref.ota_packed_ref, static_argnames=("qblock", "packe
 _fold_ref_jit = jax.jit(kref.ota_fold_ref, static_argnames=("qblock", "packed4"))
 
 
-def _fold_groups(acc, kinds, datas, scales, wg, *, gains=None, use_kernel: bool):
+def _shard_chunk(M: int, n_shards: int, kinds) -> int:
+    """Per-shard column-chunk width for the mesh-sharded fold
+    (DESIGN.md §15): ceil(M / n_shards) rounded up so every blockwise
+    scale group (qblock columns) and every int4 nibble pair stays whole
+    inside one shard's chunk — each shard's local block-id gather and
+    nibble unpack are then literally the unsharded ones."""
+    align = 2
+    for _, qblock in kinds:
+        if qblock > 0:
+            align = math.lcm(align, int(qblock))
+    mc = -(-M // n_shards)
+    return -(-mc // align) * align
+
+
+def _pad_cols(x, width: int, value=0):
+    pad = width - x.shape[1]
+    if pad <= 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, pad)), constant_values=value)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_group_program(
+    mesh,
+    kind: str,
+    qblock: int,
+    scale_sharded: bool,
+    has_acc: bool,
+    has_gains: bool,
+    use_kernel: bool,
+):
+    """Build (and cache) the jitted shard_map fold for ONE storage group.
+
+    One executable per group, exactly like the unsharded path's
+    ``_packed_ref_jit`` / ``_fold_ref_jit`` calls — this boundary is
+    load-bearing for bitwise equality: compiling several group folds
+    into one program lets XLA fuse one group's reduction into the next
+    group's ``acc + ...`` add (reassociating the float sum, ~1 ulp per
+    element, and ``optimization_barrier`` does not stop the rewrite).
+    With one group per program the per-shard float program is the
+    single-host one verbatim on a column chunk, and
+    ``out_specs=P("data")`` makes the cross-shard combine a pure
+    concatenation — zero cross-shard float ops (DESIGN.md §15). The
+    running state flows between group programs still sharded, so chains
+    of groups pay no intermediate gathers. Keyed per group (storage
+    class, scale placement, acc/gains presence, backend), so varying
+    cohorts reuse compiled programs across rounds exactly like the
+    unsharded pieces."""
+    from jax.experimental.shard_map import shard_map
+
+    P = jax.sharding.PartitionSpec
+    packed4 = kind == "int4"
+
+    def body(*ops):
+        it = iter(ops)
+        acc = next(it) if has_acc else None
+        data, scale, wseg = next(it), next(it), next(it)
+        gains = next(it) if has_gains else None
+        if acc is None:
+            fn = kops.ota_dequant_superpose if use_kernel else _packed_ref_jit
+            return fn(data, scale, wseg, gains=gains, qblock=qblock, packed4=packed4)
+        fn = kops.ota_fold_packed if use_kernel else _fold_ref_jit
+        return fn(acc, data, scale, wseg, gains=gains, qblock=qblock, packed4=packed4)
+
+    in_specs = [P("data")] if has_acc else []
+    in_specs += [
+        P(None, "data"),
+        P(None, "data") if scale_sharded else P(None, None),
+        P(),
+    ]
+    if has_gains:
+        in_specs.append(P())
+    # check_rep=False: jax 0.4.x has no replication rule for pallas_call,
+    # so the kernel path would otherwise refuse to trace under shard_map
+    return jax.jit(
+        shard_map(
+            body,
+            mesh=mesh,
+            in_specs=tuple(in_specs),
+            out_specs=P("data"),
+            check_rep=False,
+        )
+    )
+
+
+def _fold_groups_sharded(
+    acc, kinds, datas, scales, wg, *, gains=None, mesh, use_kernel: bool
+):
+    """Mesh-sharded ``_fold_groups``: the fold's SYMBOL (column) axis is
+    placed across the mesh's ``data`` axis (DESIGN.md §15).
+
+    Each output element of the fold is an independent per-column sum
+    over the K rows, so splitting columns never reassociates any float
+    sum — every shard runs the identical fused group fold on its chunk
+    and the combine is concatenation, making the sharded aggregate
+    bit-identical to the single-host oracle by construction. (Splitting
+    the K axis instead — per-shard partial superpositions psum'd across
+    shards — reassociates the K-sum and is NOT bitwise; see §15.)
+    Column chunks are padded to a qblock/nibble-aligned width with
+    zero symbols and unit scales, exactly the layout's own padding
+    convention, and trimmed after the gather. Per-shard resident symbol
+    bytes and fold work drop ~1/n_shards."""
+    n_shards = mesh.shape["data"]
+    M = 0 if acc is None else acc.shape[0]
+    for (kind, _), data in zip(kinds, datas):
+        M = max(M, data.shape[1] * (2 if kind == "int4" else 1))
+    mc = _shard_chunk(M, n_shards, kinds)
+    Mp = mc * n_shards
+
+    def _place(x, *spec):
+        # Every operand gets an explicit mesh placement: uplink rows can
+        # arrive committed to device 0 (client encode runs on the gathered
+        # broadcast params), which a jitted shard_map rejects as a device
+        # mismatch. A layout move only — zero float ops.
+        return jax.device_put(
+            x, jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(*spec))
+        )
+
+    with obs.span("shard_fold", shards=n_shards, groups=len(kinds), chunk=mc):
+        running = acc
+        if running is not None:
+            # re-shard the (gathered, device-0-committed) running state
+            # back onto the mesh
+            running = _place(jnp.pad(running, (0, Mp - running.shape[0])), "data")
+        off = 0
+        for (kind, qblock), data, scale in zip(kinds, datas, scales):
+            kg = scale.shape[0]
+            obs.metrics.inc("ota.rows", kg, kind=kind)
+            wseg = wg[off : off + kg]
+            gseg = None if gains is None else gains[off : off + kg]
+            off += kg
+            width = Mp // 2 if kind == "int4" else Mp
+            sharded = qblock > 0 and scale.shape[1] > 1
+            fn = _sharded_group_program(
+                mesh,
+                kind,
+                qblock,
+                sharded,
+                running is not None,
+                gains is not None,
+                use_kernel,
+            )
+            ops_in = [] if running is None else [running]
+            ops_in += [
+                _place(_pad_cols(data, width), None, "data"),
+                _place(_pad_cols(scale, Mp // qblock, value=1.0), None, "data")
+                if sharded
+                else _place(scale, None, None),
+                _place(wseg),
+            ]
+            if gseg is not None:
+                ops_in.append(_place(gseg))
+            running = fn(*ops_in)
+        # Gather to ONE device before anything downstream consumes the
+        # accumulator: jitted consumers (the AWGN epilogue's sumsq in
+        # particular) would otherwise compile *distributed* reductions
+        # over the still-sharded array — a different summation tree than
+        # the single-host oracle, hence not bitwise. The gather itself
+        # is a pure concatenation (zero float ops).
+        out = jax.device_put(running, jax.devices()[0])
+    return out[:M] if Mp != M else out
+
+
+def _fold_groups(
+    acc, kinds, datas, scales, wg, *, gains=None, mesh=None, use_kernel: bool
+):
     """Fold grouped micro-batches into the running superposition ``acc``.
 
     kinds/datas/scales as produced by ``_group_rows``; ``wg`` the final
@@ -298,7 +464,17 @@ def _fold_groups(acc, kinds, datas, scales, wg, *, gains=None, use_kernel: bool)
     span, and each storage group bumps the per-storage-class row
     counter ``ota.rows{kind=...}`` — the observation side only; the
     folded values are untouched either way.
+
+    ``mesh``: optional 1-D device mesh with a ``data`` axis
+    (``launch.mesh.make_data_mesh``) — routes to the column-sharded
+    fold (``_fold_groups_sharded``, span ``shard_fold``), bit-identical
+    to this path by construction (DESIGN.md §15).
     """
+    if mesh is not None:
+        return _fold_groups_sharded(
+            acc, kinds, datas, scales, wg, gains=gains, mesh=mesh,
+            use_kernel=use_kernel,
+        )
     with obs.span("fold", groups=len(kinds)):
         off = 0
         for (kind, qblock), data, scale in zip(kinds, datas, scales):
@@ -332,6 +508,7 @@ def _aggregate_rows_flat(
     cfg: OTAConfig,
     gains=None,
     n_valid: int,
+    mesh=None,
     use_kernel: bool = False,
 ):
     """Aggregate packed uplink rows grouped by wire storage class.
@@ -373,7 +550,9 @@ def _aggregate_rows_flat(
         w = chan.combine_weights(weights, gains)
         gg = gains[perm]  # group-order view of the per-row gains
     wg = w[perm]  # group-order view of the cohort weights
-    acc = _fold_groups(None, kinds, datas, scales, wg, gains=gg, use_kernel=use_kernel)
+    acc = _fold_groups(
+        None, kinds, datas, scales, wg, gains=gg, mesh=mesh, use_kernel=use_kernel
+    )
     with obs.span("finalize"):
         y, noise_std = _awgn_epilogue(key, acc, cfg=cfg, n_valid=n_valid)
     return y, habs, participate, noise_std
@@ -455,10 +634,14 @@ class OtaAccumulator:
         layout: packing.Layout,
         cfg: OTAConfig = OTAConfig(),
         *,
+        mesh=None,
         use_kernel: Optional[bool] = None,
     ):
         self.layout = layout
         self.cfg = cfg
+        # optional data-axis mesh: every fold shards its symbol axis
+        # (DESIGN.md §15), bit-identical to the single-host fold
+        self.mesh = mesh
         self.use_kernel = _use_kernel_default() if use_kernel is None else use_kernel
         self.reset()
 
@@ -509,6 +692,7 @@ class OtaAccumulator:
             scales,
             w[perm],
             gains=g,
+            mesh=self.mesh,
             use_kernel=self.use_kernel,
         )
         self.n_folded += len(rows)
@@ -637,6 +821,7 @@ def ota_aggregate_packed(
     cfg: OTAConfig = OTAConfig(),
     *,
     gains=None,
+    mesh=None,
     use_kernel: Optional[bool] = None,
 ) -> Tuple[Pytree, "AggregateInfo"]:
     """Aggregate pre-packed client rows; unpack the result per ``layout``.
@@ -657,6 +842,13 @@ def ota_aggregate_packed(
     contribute exact zeros, surviving rows superpose scaled by their
     misalignment gain inside the fused pass. ``gains=None`` is bitwise
     identical to the pre-channel aggregation for the same round key.
+
+    ``mesh``: optional ``data``-axis device mesh
+    (``launch.mesh.make_data_mesh``) — packed rows only. The fold's
+    symbol axis shards across the mesh and the aggregate stays
+    bit-identical to the single-host path (DESIGN.md §15); the AWGN
+    epilogue runs unsharded on the gathered accumulator, so channel,
+    weights, and noise draws are untouched.
     """
     if use_kernel is None:
         use_kernel = _use_kernel_default()
@@ -677,6 +869,7 @@ def ota_aggregate_packed(
             cfg=cfg,
             gains=gains,
             n_valid=layout.size,
+            mesh=mesh,
             use_kernel=use_kernel,
         )
         wire_kw = dict(
@@ -698,6 +891,9 @@ def ota_aggregate_packed(
     else:
         assert gains is None, (
             "gains= is a packed-uplink feature (PackedRow cohorts only)"
+        )
+        assert mesh is None, (
+            "mesh= is a packed-uplink feature (PackedRow cohorts only)"
         )
         y, habs, participate, noise_std = ota_aggregate_flat(
             key,

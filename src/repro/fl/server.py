@@ -189,6 +189,15 @@ class FLServer:
             self.channel = None
         else:
             raise ValueError(f"unknown channel_model {fl_cfg.channel_model!r}")
+        # mesh-sharded OTA data plane (DESIGN.md §15): both round loops
+        # aggregate on this mesh when the knob is set; the sharded fold
+        # is bit-identical to the single-host one, so the knob never
+        # changes a run's trajectory.
+        if fl_cfg.mesh_data_shards > 1:
+            from repro.launch.mesh import make_data_mesh
+            self.mesh = make_data_mesh(fl_cfg.mesh_data_shards)
+        else:
+            self.mesh = None
         self._chan_hist: Dict[int, List[int]] = {}  # id -> [n_trunc, n_seen]
         self.round_logs: List[RoundLog] = []
         self._rng = np.random.RandomState(fl_cfg.seed + 7)
@@ -431,6 +440,7 @@ class FLServer:
                 gains=None
                 if row_gains is None
                 else jnp.asarray(row_gains, jnp.float32),
+                mesh=self.mesh,
             )
             self.last_uplink_bytes = info["uplink_bytes"]
             self._apply_update(agg, round_key)
@@ -738,7 +748,7 @@ class StreamingFLServer(FLServer):
         # ---- fold arrivals into the persistent accumulator: the on-time
         # wave at the trigger, then the staleness-discounted late wave
         pos = {j: p for p, j in enumerate(counted)}
-        acc = ota.OtaAccumulator(self.layout, ocfg)
+        acc = ota.OtaAccumulator(self.layout, ocfg, mesh=self.mesh)
 
         def _gsel(idx):
             if g_counted is None:

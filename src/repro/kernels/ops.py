@@ -180,6 +180,82 @@ def topk_cosine(
     return s[:Q, :k], i[:Q, :k]
 
 
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel", "mesh"))
+def topk_cosine_sharded(
+    qm: jnp.ndarray,
+    recs: jnp.ndarray,
+    scales: Optional[jnp.ndarray],
+    n: jnp.ndarray,
+    *,
+    k: int,
+    mesh,
+    use_kernel: bool = False,
+):
+    """Mesh-sharded ``topk_cosine``: the record slab rows place across
+    the ``data`` axis of ``mesh`` (DESIGN.md §15).
+
+    recs: (Np, D) capacity slab with Np divisible by
+    shards * topk_similarity.TILE_N (the engine pads with the arena's
+    own zero-row/unit-scale convention); scales row-shard alongside.
+    Every shard runs the identical tile loop on its row block with its
+    local live count — shard boundaries are TILE_N-aligned, so each
+    per-tile dot is literally one of the unsharded path's dots and the
+    per-record scores are bit-equal. The merge then re-sorts the
+    per-shard candidate lanes with ``lax.top_k``: within a shard the
+    lanes are already (desc score, asc index)-ordered and shards
+    concatenate in ascending index-range order, so positional ties
+    resolve exactly per the engine tie contract (descending score,
+    ties by ascending global index) and the result is bit-identical to
+    ``topk_cosine`` — scores and indices. k <= TOPK_LANES guarantees
+    any global top-k member survives its shard's lane budget.
+    """
+    from jax.experimental.shard_map import shard_map
+    from repro.kernels import ref as _ref
+    from repro.kernels import topk_similarity as _tk
+
+    P = jax.sharding.PartitionSpec
+    n_shards = mesh.shape["data"]
+    Np = recs.shape[0]
+    assert Np % (n_shards * _tk.TILE_N) == 0, (Np, n_shards)
+    rows = Np // n_shards
+    Q, D = qm.shape
+    assert 0 < k <= _tk.TOPK_LANES, k
+    Qp = -(-Q // 8) * 8  # f32 sublane multiple
+    qp = jnp.pad(qm, ((0, Qp - Q), (0, 0))) if Qp != Q else qm
+    interpret = jax.devices()[0].platform != "tpu"
+
+    def _local_topk(qloc, rloc, sloc, nloc):
+        lo = jax.lax.axis_index("data") * rows
+        n_local = jnp.clip(nloc - lo, 0, rows)
+        if use_kernel:
+            s, i = _tk.topk_similarity_2d(qloc, rloc, sloc, n_local,
+                                          interpret=interpret)
+        else:
+            s, i = _ref.topk_similarity_ref(qloc, rloc, sloc, n_local)
+        return s[None], (i + lo)[None]
+
+    if scales is None:
+        body = lambda q_, r_, n_: _local_topk(q_, r_, None, n_)
+        in_specs = (P(), P("data"), P())
+        args = (qp, recs, n)
+    else:
+        body = _local_topk
+        in_specs = (P(), P("data"), P("data"), P())
+        args = (qp, recs, scales, n)
+    s, i = shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=(P("data"), P("data"))
+    )(*args)
+    # (shards, Qp, LANES) candidates -> flatten the shard axis in index
+    # order: every tied set is then positionally ascending-index, and
+    # lax.top_k keeps earliest positions among ties — the same merge
+    # mechanism (and hence the same tie contract) as the unsharded
+    # running merge.
+    cand_s = jnp.swapaxes(s, 0, 1).reshape(Qp, n_shards * _tk.TOPK_LANES)
+    cand_i = jnp.swapaxes(i, 0, 1).reshape(Qp, n_shards * _tk.TOPK_LANES)
+    v, a = jax.lax.top_k(cand_s, k)
+    return v[:Q], jnp.take_along_axis(cand_i, a, axis=1)[:Q]
+
+
 @functools.partial(jax.jit, static_argnames=("qblock", "packed4"))
 def ota_fold_packed(
     acc: jnp.ndarray,

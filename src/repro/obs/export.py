@@ -102,6 +102,7 @@ BENCH_REPORTS: Sequence[str] = (
     "retrieval",
     "streaming",
     "channel",
+    "mesh",
     "satisfaction",
     "strategies",
     "obs",

@@ -81,6 +81,36 @@ class ArenaStore:
             out += self._scales[: self._n].nbytes
         return out
 
+    def shard_rows(self, n_shards: int) -> int:
+        """Rows per shard under row sharding (DESIGN.md §15): the
+        capacity divided over ``n_shards`` contiguous, TILE_N-aligned
+        blocks (rounded up — the mesh path pads the slab to
+        ``n_shards * shard_rows`` with the arena's own zero-row/
+        unit-scale padding convention, so shard boundaries always land
+        on kernel tile boundaries)."""
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        return -(-self.capacity // (n_shards * TILE_N)) * TILE_N
+
+    def shard_bounds(self, n_shards: int) -> Tuple[Tuple[int, int], ...]:
+        """Per-shard ``[lo, hi)`` row ranges over the capacity slab —
+        contiguous, TILE_N-aligned, clamped to capacity (trailing
+        shards may be empty when the slab is smaller than the mesh)."""
+        rows = self.shard_rows(n_shards)
+        return tuple(
+            (min(s * rows, self.capacity), min((s + 1) * rows, self.capacity))
+            for s in range(n_shards)
+        )
+
+    def shard_nbytes(self, n_shards: int) -> int:
+        """Resident bytes of ONE shard's slab slice (symbols + scale
+        grid) under row sharding — the per-device memory the mesh
+        retrieval path holds, ~1/n_shards of the full slab."""
+        per_row = self._data.itemsize * self._data.shape[1]
+        if self._scales is not None:
+            per_row += self._scales.itemsize * self._scales.shape[1]
+        return self.shard_rows(n_shards) * per_row
+
     def _grow(self, need: int) -> None:
         cap = self.capacity
         if need <= cap:

@@ -17,6 +17,13 @@ equal scores by ascending record index. Three implementations share it:
 As with the OTA data plane, the kernel runs by default only on TPU
 (interpret-mode Pallas is a correctness tool); off-TPU the engine uses
 the numpy path unless ``use_kernel`` forces otherwise.
+
+Mesh sharding (DESIGN.md §15): construct the engine with ``mesh`` (a
+``data``-axis device mesh) to place the slab rows across devices — the
+per-shard fused top-k plus the exact lane merge is bit-identical to the
+unsharded jax path, scores and indices. ``n_shards`` instead shards on
+the host (per-shard GEMM + ``merge_candidates``), bounding peak f32
+bytes at ~1/n_shards under the same tie contract.
 """
 
 from __future__ import annotations
@@ -79,6 +86,26 @@ def brute_force_topk(
     return np.take_along_axis(scores, order, axis=1), order.astype(np.int32)
 
 
+def merge_candidates(cand_s, cand_i, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact k-way merge of per-chunk top-k candidate lists under the
+    tie contract: any global top-k member is top-k within its chunk, so
+    re-sorting the concatenated candidates by (-score, ascending global
+    index) — ``np.lexsort``'s last-key-primary order — reproduces the
+    global selection exactly. Shared by the int8 chunked path and the
+    host-sharded path (DESIGN.md §15)."""
+    s_all = np.concatenate(cand_s, axis=1)
+    i_all = np.concatenate(cand_i, axis=1)
+    q = s_all.shape[0]
+    k = min(k, s_all.shape[1])
+    scores = np.empty((q, k), np.float32)
+    idx = np.empty((q, k), np.int32)
+    for r in range(q):
+        order = np.lexsort((i_all[r], -s_all[r]))[:k]
+        scores[r] = s_all[r, order]
+        idx[r] = i_all[r, order]
+    return scores, idx
+
+
 def normalize_rows(mat: np.ndarray) -> np.ndarray:
     """Unit-normalize rows; all-zero rows stay zero (the zero-norm query
     guard — downstream similarity filters drop their sim-0 hits)."""
@@ -90,9 +117,25 @@ def normalize_rows(mat: np.ndarray) -> np.ndarray:
 class RetrievalEngine:
     """Batched cosine top-k queries against one arena."""
 
-    def __init__(self, store: ArenaStore, *, use_kernel: Optional[bool] = None):
+    def __init__(
+        self,
+        store: ArenaStore,
+        *,
+        use_kernel: Optional[bool] = None,
+        mesh=None,
+        n_shards: int = 0,
+    ):
         self.store = store
         self.use_kernel = use_kernel
+        # mesh-sharded data plane (DESIGN.md §15): with ``mesh`` (a
+        # ``data``-axis device mesh, launch.mesh.make_data_mesh) the
+        # slab rows place across devices and queries run the sharded
+        # fused top-k — bit-identical to the unsharded jax path.
+        # ``n_shards`` > 1 instead shards on the host: per-shard GEMM +
+        # exact merge (the int8 chunked machinery over shard bounds) —
+        # ~1/n_shards peak f32 bytes, same tie contract.
+        self.mesh = mesh
+        self.n_shards = int(n_shards)
         # device copies of the arena slab for the kernel path, keyed on
         # (buffer identity, live count): appends (new n) and grows (new
         # buffer) invalidate; repeated queries between appends reuse the
@@ -118,8 +161,12 @@ class RetrievalEngine:
                 use_kernel = _default_use_kernel()
             from repro.kernels.topk_similarity import TOPK_LANES
 
+            if self.mesh is not None and k <= TOPK_LANES:
+                return self._topk_jax_sharded(queries, k, use_kernel)
             if use_kernel and k <= TOPK_LANES:
                 return self._topk_jax(queries, k)
+            if self.n_shards > 1:
+                return self._topk_numpy_sharded(queries, k)
             return self._topk_numpy(queries, k)
 
     def _topk_numpy(self, queries, k):
@@ -136,16 +183,72 @@ class RetrievalEngine:
             s, i = stable_topk(queries @ store.dequantize_rows(lo, hi).T, k)
             cand_s.append(s)
             cand_i.append(i + lo)
-        s_all = np.concatenate(cand_s, axis=1)
-        i_all = np.concatenate(cand_i, axis=1)
-        q = queries.shape[0]
-        scores = np.empty((q, k), np.float32)
-        idx = np.empty((q, k), np.int32)
-        for r in range(q):
-            order = np.lexsort((i_all[r], -s_all[r]))[:k]
-            scores[r] = s_all[r, order]
-            idx[r] = i_all[r, order]
-        return scores, idx
+        return merge_candidates(cand_s, cand_i, k)
+
+    def _topk_numpy_sharded(self, queries, k):
+        """Host-sharded numpy path: per-shard GEMM + top-k over the
+        arena's shard bounds, then the exact merge. The selection obeys
+        the tie contract against the per-shard GEMM scores; note BLAS
+        may pick different microkernels per GEMM shape, so last-ulp
+        score agreement with the single-GEMM path is not guaranteed —
+        the bitwise-locked multi-device lane is the jax path
+        (``_topk_jax_sharded``), see DESIGN.md §15."""
+        store, n = self.store, len(self.store)
+        cand_s, cand_i = [], []
+        with obs.span("shard_merge", shards=self.n_shards, k=k):
+            for lo, hi in store.shard_bounds(self.n_shards):
+                hi = min(hi, n)
+                if hi <= lo:
+                    continue
+                s, i = stable_topk(queries @ store.dequantize_rows(lo, hi).T, k)
+                cand_s.append(s)
+                cand_i.append(i + lo)
+            return merge_candidates(cand_s, cand_i, k)
+
+    def _topk_jax_sharded(self, queries, k, use_kernel: bool):
+        """Mesh-sharded fused top-k (DESIGN.md §15): slab rows place
+        across the mesh's ``data`` axis, each shard runs the fused tile
+        loop locally, and the lane merge reproduces the unsharded
+        selection bit-identically (``kernels.ops.topk_cosine_sharded``).
+        The slab is padded to shards * shard_rows with the arena's own
+        zero-row/unit-scale convention before upload."""
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import topk_cosine_sharded
+
+        store = self.store
+        n_shards = self.mesh.shape["data"]
+        data, scales = store.raw()
+        pad = n_shards * store.shard_rows(n_shards) - data.shape[0]
+        cache = self._dev_cache
+        if cache is None or cache[0] is not data or cache[1] != len(store):
+            dd, ss = data, scales
+            if pad:
+                dd = np.concatenate(
+                    [dd, np.zeros((pad, dd.shape[1]), dd.dtype)]
+                )
+                if ss is not None:
+                    ss = np.concatenate(
+                        [ss, np.ones((pad, ss.shape[1]), np.float32)]
+                    )
+            cache = (
+                data,
+                len(store),
+                jnp.asarray(dd),
+                None if ss is None else jnp.asarray(ss),
+            )
+            self._dev_cache = cache
+        with obs.span("shard_merge", shards=n_shards, k=k):
+            s, i = topk_cosine_sharded(
+                jnp.asarray(queries),
+                cache[2],
+                cache[3],
+                jnp.int32(len(store)),
+                k=k,
+                mesh=self.mesh,
+                use_kernel=use_kernel,
+            )
+            return np.asarray(s), np.asarray(i)
 
     def _topk_jax(self, queries, k):
         import jax.numpy as jnp

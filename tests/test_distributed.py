@@ -1,27 +1,13 @@
 """Distributed-path tests: run in a subprocess with 8 forced host devices
-(the main pytest process must keep 1 device for the rest of the suite).
+(the main pytest process must keep 1 device for the rest of the suite;
+see tests/_multidevice.py, the shared subprocess helper).
 
 Covers: shard_map expert-parallel MoE == local math, a sharded train step
 on the (data, model) mesh with the production param specs, and the
 mesh-aware ``constrain`` helper.
 """
-import os
-import subprocess
-import sys
-import textwrap
 
-
-REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def _run(script: str) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = REPO_SRC
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
-                         capture_output=True, text=True, env=env, timeout=560)
-    assert out.returncode == 0, out.stdout + "\n" + out.stderr
-    return out.stdout
+from _multidevice import run_multidevice as _run
 
 
 def test_shard_map_moe_matches_local():
@@ -61,11 +47,11 @@ def test_sharded_train_step_runs_and_matches_single_device():
         model = build_model(cfg)
         opt = adamw(1e-3)
         state = init_train_state(model, opt, jax.random.key(0))
-        batch = {"tokens": jax.random.randint(jax.random.key(1), (4, 64),
-                                              0, cfg.vocab_size)}
+        batch = {
+            "tokens": jax.random.randint(jax.random.key(1), (4, 64), 0, cfg.vocab_size)
+        }
         # single-device reference
-        ref_state, ref_metrics = jax.jit(make_train_step(model, opt))(
-            state, batch)
+        ref_state, ref_metrics = jax.jit(make_train_step(model, opt))(state, batch)
         ref_loss = float(ref_metrics["loss"])
 
         from repro.launch.mesh import make_mesh
@@ -73,19 +59,26 @@ def test_sharded_train_step_runs_and_matches_single_device():
         mesh = make_mesh((2, 4), ("data", "model"))
         state_shapes = jax.eval_shape(lambda: state)
         state_specs = {
-            "params": shd.tree_param_specs(state_shapes["params"], mesh,
-                                           n_kv_heads=cfg.n_kv_heads),
-            "opt": {k: shd.tree_param_specs(v, mesh, n_kv_heads=cfg.n_kv_heads)
-                    for k, v in state_shapes["opt"].items()},
+            "params": shd.tree_param_specs(
+                state_shapes["params"], mesh, n_kv_heads=cfg.n_kv_heads
+            ),
+            "opt": {
+                k: shd.tree_param_specs(v, mesh, n_kv_heads=cfg.n_kv_heads)
+                for k, v in state_shapes["opt"].items()
+            },
             "step": jax.sharding.PartitionSpec(),
         }
         batch_specs = shd.batch_spec(
-            {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
-             for k, v in batch.items()}, mesh)
+            {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}, mesh
+        )
         with use_mesh(mesh):
-            jitted = jax.jit(make_train_step(model, opt),
-                             in_shardings=(shd.to_named(state_specs, mesh),
-                                           shd.to_named(batch_specs, mesh)))
+            jitted = jax.jit(
+                make_train_step(model, opt),
+                in_shardings=(
+                    shd.to_named(state_specs, mesh),
+                    shd.to_named(batch_specs, mesh),
+                ),
+            )
             state2 = jax.device_put(state, shd.to_named(state_specs, mesh))
             batch2 = jax.device_put(batch, shd.to_named(batch_specs, mesh))
             new_state, metrics = jitted(state2, batch2)

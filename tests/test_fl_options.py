@@ -13,8 +13,16 @@ from repro.fl import FLServer
 
 
 def _cfg(**kw):
-    base = dict(n_clients=6, clients_per_round=3, n_rounds=2, local_steps=1,
-                local_batch=2, lr=1e-3, planner="unified", seed=0)
+    base = dict(
+        n_clients=6,
+        clients_per_round=3,
+        n_rounds=2,
+        local_steps=1,
+        local_batch=2,
+        lr=1e-3,
+        planner="unified",
+        seed=0,
+    )
     base.update(kw)
     return FLConfig(**base)
 
@@ -41,11 +49,10 @@ def test_fedprox_shrinks_delta_norm():
     def delta_norm(mu):
         srv = FLServer(_cfg(fedprox_mu=mu, local_steps=4), shard_size=6)
         client = srv.clients[0]
-        delta, _ = client.local_update(srv.params, 16, local_steps=4,
-                                       local_batch=2, lr=5e-2,
-                                       fedprox_mu=mu)
-        return float(jnp.sqrt(sum(jnp.sum(x ** 2)
-                                  for x in jax.tree.leaves(delta))))
+        delta, _ = client.local_update(
+            srv.params, 16, local_steps=4, local_batch=2, lr=5e-2, fedprox_mu=mu
+        )
+        return float(jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(delta))))
 
     assert delta_norm(10.0) < delta_norm(0.0)
 
@@ -54,8 +61,7 @@ def test_server_momentum_accumulates():
     srv = FLServer(_cfg(server_momentum=0.9), shard_size=6)
     srv.run(2)
     assert hasattr(srv, "_velocity")
-    vnorm = float(sum(jnp.sum(jnp.abs(v))
-                      for v in jax.tree.leaves(srv._velocity)))
+    vnorm = float(sum(jnp.sum(jnp.abs(v)) for v in jax.tree.leaves(srv._velocity)))
     assert vnorm > 0
 
 

@@ -7,12 +7,16 @@ except ImportError:  # bare env: deterministic fallback sampler
     from _hypothesis_fallback import given, settings, st
 
 from repro.kernels import ops
-from repro.kernels.ops import (pack_int4, qmatmul_int4,
-                               quantize_weights_int4, unpack_int4)
+from repro.kernels.ops import (
+    pack_int4,
+    qmatmul_int4,
+    quantize_weights_int4,
+    unpack_int4,
+)
 
 
 @settings(deadline=None, max_examples=20)
-@given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 2 ** 16))
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 2**16))
 def test_pack_unpack_roundtrip(kh, n, seed):
     rng = np.random.RandomState(seed)
     q = jnp.asarray(rng.randint(-8, 8, size=(2 * kh, n)), jnp.int8)

@@ -14,8 +14,7 @@ from repro.kernels import ops, ref
 
 
 @settings(deadline=None, max_examples=12)
-@given(st.integers(1, 4000), st.sampled_from([4, 8, 16]),
-       st.integers(0, 2 ** 16))
+@given(st.integers(1, 4000), st.sampled_from([4, 8, 16]), st.integers(0, 2**16))
 def test_fake_quant_kernel_matches_ref(n, bits, seed):
     rng = np.random.RandomState(seed)
     x = jnp.asarray(rng.randn(n).astype(np.float32) * rng.uniform(0.1, 10))
@@ -35,15 +34,17 @@ def test_fake_quant_kernel_shapes_dtypes(shape, dtype):
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
     scale = jnp.maximum(amax, 1e-12) / qrange(8)
     want = ref.fake_quant_ref(x.astype(jnp.float32), scale, 8)
-    np.testing.assert_allclose(got.astype(jnp.float32), want,
-                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(got.astype(jnp.float32), want, rtol=2e-2, atol=2e-2)
 
 
 def test_fake_quant_kernel_stochastic_unbiased():
     x = jnp.asarray(np.random.RandomState(1).randn(512), jnp.float32)
-    outs = jnp.stack([
-        ops.fake_quant(x, 4, stochastic=True, key=jax.random.key(i))
-        for i in range(48)])
+    outs = jnp.stack(
+        [
+            ops.fake_quant(x, 4, stochastic=True, key=jax.random.key(i))
+            for i in range(48)
+        ]
+    )
     amax = jnp.max(jnp.abs(x))
     scale = amax / qrange(4)
     err = jnp.abs(jnp.mean(outs, 0) - x)
@@ -52,7 +53,7 @@ def test_fake_quant_kernel_stochastic_unbiased():
 
 
 @settings(deadline=None, max_examples=10)
-@given(st.integers(1, 12), st.integers(10, 6000), st.integers(0, 2 ** 16))
+@given(st.integers(1, 12), st.integers(10, 6000), st.integers(0, 2**16))
 def test_ota_kernel_matches_ref(k, m, seed):
     rng = np.random.RandomState(seed)
     x = jnp.asarray(rng.randn(k, m).astype(np.float32))
@@ -65,20 +66,20 @@ def test_ota_kernel_matches_ref(k, m, seed):
 
 
 @settings(deadline=None, max_examples=6)
-@given(st.integers(1, 10), st.integers(10, 5000), st.integers(0, 2 ** 16))
+@given(st.integers(1, 10), st.integers(10, 5000), st.integers(0, 2**16))
 def test_ota_fused_kernel_matches_ref(k, m, seed):
     """Fused quantize+superpose kernel (interpret) == jnp oracle, incl.
     the in-kernel positional dither and the sum-of-squares output."""
     rng = np.random.RandomState(seed)
     x = jnp.asarray(rng.randn(k, m).astype(np.float32))
     bits = rng.choice([4, 8, 16, 32], size=k)
-    qmax = jnp.asarray(np.where(bits < 32, 2.0 ** (bits - 1) - 1, 0.0),
-                       jnp.float32)
+    qmax = jnp.asarray(np.where(bits < 32, 2.0 ** (bits - 1) - 1, 0.0), jnp.float32)
     amax = jnp.max(jnp.abs(x), axis=1)
-    scale = jnp.where(qmax > 0, jnp.maximum(amax, 1e-12)
-                      / jnp.maximum(qmax, 1.0), 1.0)
+    scale = jnp.where(
+        qmax > 0, jnp.maximum(amax, 1e-12) / jnp.maximum(qmax, 1.0), 1.0
+    )
     w = jnp.asarray(rng.uniform(0, 1, k).astype(np.float32))
-    sr_seed = jnp.uint32(rng.randint(0, 2 ** 31))
+    sr_seed = jnp.uint32(rng.randint(0, 2**31))
     got_acc, got_ss = ops.ota_quantize_superpose(x, scale, qmax, w, sr_seed)
     want_acc, want_ss = ref.ota_fused_ref(x, scale, qmax, w, sr_seed)
     np.testing.assert_allclose(got_acc, want_acc, rtol=1e-6, atol=1e-6)
@@ -86,8 +87,9 @@ def test_ota_fused_kernel_matches_ref(k, m, seed):
 
 
 @settings(deadline=None, max_examples=8)
-@given(st.integers(1, 300), st.integers(1, 300), st.integers(1, 300),
-       st.integers(0, 2 ** 16))
+@given(
+    st.integers(1, 300), st.integers(1, 300), st.integers(1, 300), st.integers(0, 2**16)
+)
 def test_qmatmul_matches_ref(m, k, n, seed):
     rng = np.random.RandomState(seed)
     x = jnp.asarray(rng.randn(m, k).astype(np.float32))
@@ -98,11 +100,14 @@ def test_qmatmul_matches_ref(m, k, n, seed):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("B,S,H,KV,D", [
-    (2, 128, 4, 4, 64),   # MHA, tile-aligned
-    (1, 256, 4, 2, 32),   # GQA
-    (2, 200, 2, 1, 64),   # MQA, non-tile-multiple seq
-])
+@pytest.mark.parametrize(
+    "B,S,H,KV,D",
+    [
+        (2, 128, 4, 4, 64),  # MHA, tile-aligned
+        (1, 256, 4, 2, 32),  # GQA
+        (2, 200, 2, 1, 64),  # MQA, non-tile-multiple seq
+    ],
+)
 def test_flash_attention_matches_naive(B, S, H, KV, D):
     import jax.numpy as jnp
 
@@ -131,9 +136,11 @@ def test_flash_attention_bf16():
     want = ref.flash_attention_ref(
         q.swapaxes(1, 2).reshape(2, 128, 64),
         k.swapaxes(1, 2).reshape(2, 128, 64),
-        v.swapaxes(1, 2).reshape(2, 128, 64)).reshape(1, 2, 128, 64).swapaxes(1, 2)
-    np.testing.assert_allclose(got.astype(jnp.float32),
-                               want.astype(jnp.float32), rtol=3e-2, atol=3e-2)
+        v.swapaxes(1, 2).reshape(2, 128, 64),
+    ).reshape(1, 2, 128, 64).swapaxes(1, 2)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=3e-2, atol=3e-2
+    )
 
 
 def test_qmatmul_int8_close_to_fp32():

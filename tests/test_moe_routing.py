@@ -28,8 +28,7 @@ def test_route_local_invariants():
     T, d, E, K, C = 64, 16, 8, 2, 24
     xf = jnp.asarray(rng.randn(T, d).astype(np.float32))
     router = jnp.asarray(rng.randn(d, E).astype(np.float32))
-    gate_vals, safe_expert, safe_rank, keep, aux = _route_local(
-        xf, router, E, K, C)
+    gate_vals, safe_expert, safe_rank, keep, aux = _route_local(xf, router, E, K, C)
     # gates normalised over K
     np.testing.assert_allclose(np.asarray(gate_vals.sum(-1)), 1.0, rtol=1e-5)
     # ranks within capacity for kept pairs; (expert, rank) unique

@@ -8,16 +8,15 @@ from repro.core import ota
 
 def _updates(n, shape=(500,), seed=0):
     rng = np.random.RandomState(seed)
-    return [{"w": jnp.asarray(rng.randn(*shape).astype(np.float32))}
-            for _ in range(n)]
+    return [{"w": jnp.asarray(rng.randn(*shape).astype(np.float32))} for _ in range(n)]
 
 
 def test_high_snr_high_bits_recovers_weighted_mean():
     ups = _updates(5)
     weights = [1.0, 2.0, 1.0, 0.5, 1.5]
     agg, info = ota.ota_aggregate(
-        jax.random.key(0), ups, [32] * 5, weights,
-        ota.OTAConfig(snr_db=80.0))
+        jax.random.key(0), ups, [32] * 5, weights, ota.OTAConfig(snr_db=80.0)
+    )
     # compute expected weighted mean over PARTICIPATING clients
     mask = info["participation"]
     w = np.array(weights) * np.array(mask, float)
@@ -30,7 +29,8 @@ def test_fade_truncation_excludes_clients():
     # with many clients, some should hit the fade threshold
     ups = _updates(64)
     agg, info = ota.ota_aggregate(
-        jax.random.key(1), ups, [8] * 64, [1.0] * 64, ota.OTAConfig())
+        jax.random.key(1), ups, [8] * 64, [1.0] * 64, ota.OTAConfig()
+    )
     assert 0 < info["n_participating"] <= 64
     # Rayleigh |h|^2 ~ Exp(1): P(<0.1) ~ 9.5%; expect a few excluded
     assert info["n_participating"] < 64
@@ -40,10 +40,12 @@ def test_lower_snr_more_noise():
     ups = _updates(4)
     outs = {}
     for snr in (40.0, 0.0):
-        agg, _ = ota.ota_aggregate(jax.random.key(2), ups, [32] * 4,
-                                   [1.0] * 4, ota.OTAConfig(snr_db=snr))
-        clean, _ = ota.ota_aggregate(jax.random.key(2), ups, [32] * 4,
-                                     [1.0] * 4, ota.OTAConfig(snr_db=200.0))
+        agg, _ = ota.ota_aggregate(
+            jax.random.key(2), ups, [32] * 4, [1.0] * 4, ota.OTAConfig(snr_db=snr)
+        )
+        clean, _ = ota.ota_aggregate(
+            jax.random.key(2), ups, [32] * 4, [1.0] * 4, ota.OTAConfig(snr_db=200.0)
+        )
         outs[snr] = float(jnp.linalg.norm(agg["w"] - clean["w"]))
     assert outs[0.0] > outs[40.0] > 0
 
@@ -55,8 +57,12 @@ def test_mixed_precision_unbiased_expectation():
     R = 48
     for i in range(R):
         agg, _ = ota.ota_aggregate(
-            jax.random.key(100 + i), ups, [4, 8, 16], [1.0] * 3,
-            ota.OTAConfig(snr_db=60.0, fade_threshold=0.0))
+            jax.random.key(100 + i),
+            ups,
+            [4, 8, 16],
+            [1.0] * 3,
+            ota.OTAConfig(snr_db=60.0, fade_threshold=0.0),
+        )
         # fade may exclude clients; use unfiltered config via threshold 0.0
         mean += np.asarray(agg["w"]) / R
     # expectation should approach SOME weighted mean of the participating
@@ -68,10 +74,16 @@ def test_mixed_precision_unbiased_expectation():
 
 def _mixed_updates(n, seed=7):
     rng = np.random.RandomState(seed)
-    return [{"w": jnp.asarray(rng.randn(40, 13).astype(np.float32)),
-             "b": [jnp.asarray(rng.randn(77).astype(np.float32)),
-                   jnp.asarray(rng.randn(3, 5, 2).astype(np.float32))]}
-            for _ in range(n)]
+    return [
+        {
+            "w": jnp.asarray(rng.randn(40, 13).astype(np.float32)),
+            "b": [
+                jnp.asarray(rng.randn(77).astype(np.float32)),
+                jnp.asarray(rng.randn(3, 5, 2).astype(np.float32)),
+            ],
+        }
+        for _ in range(n)
+    ]
 
 
 def test_flat_path_matches_pertree_oracle():
@@ -86,8 +98,9 @@ def test_flat_path_matches_pertree_oracle():
         tree, info_t = ota.ota_aggregate_pertree(key, ups, bits, weights, cfg)
         assert jax.tree.structure(flat) == jax.tree.structure(tree)
         for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(tree)):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                       rtol=1e-4, atol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5
+            )
         assert info_f["participation"] == info_t["participation"]
         assert abs(info_f["noise_std"] - info_t["noise_std"]) < 1e-6
 
@@ -100,13 +113,10 @@ def test_fused_kernel_matches_jnp_reference_path():
     weights = [1.0] * 5
     key = jax.random.key(9)
     cfg = ota.OTAConfig(snr_db=30.0)
-    a_jnp, _ = ota.ota_aggregate(key, ups, bits, weights, cfg,
-                                 use_kernel=False)
-    a_ker, _ = ota.ota_aggregate(key, ups, bits, weights, cfg,
-                                 use_kernel=True)
+    a_jnp, _ = ota.ota_aggregate(key, ups, bits, weights, cfg, use_kernel=False)
+    a_ker, _ = ota.ota_aggregate(key, ups, bits, weights, cfg, use_kernel=True)
     for a, b in zip(jax.tree.leaves(a_jnp), jax.tree.leaves(a_ker)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
 
 
 def test_flat_stochastic_rounding_unbiased_over_keys():
@@ -118,13 +128,18 @@ def test_flat_stochastic_rounding_unbiased_over_keys():
     R = 64
     acc = None
     for i in range(R):
-        agg, _ = ota.ota_aggregate(jax.random.key(5000 + i), ups,
-                                   [4, 4, 8], weights, cfg)
+        agg, _ = ota.ota_aggregate(
+            jax.random.key(5000 + i), ups, [4, 4, 8], weights, cfg
+        )
         flat = jnp.concatenate([l.reshape(-1) for l in jax.tree.leaves(agg)])
         acc = flat / R if acc is None else acc + flat / R
-    want = np.mean([np.concatenate(
-        [np.asarray(l).reshape(-1) for l in jax.tree.leaves(u)])
-        for u in ups], axis=0)
+    want = np.mean(
+        [
+            np.concatenate([np.asarray(l).reshape(-1) for l in jax.tree.leaves(u)])
+            for u in ups
+        ],
+        axis=0,
+    )
     # 4-bit shared-grid scale ~ amax/7; mean-of-R rounding noise ~ scale/2/sqrt(R)
     err = float(jnp.abs(acc - want).max())
     assert err < 0.12, err

@@ -45,13 +45,14 @@ def test_pack_unpack_roundtrip_mixed_dtypes():
     flat = packing.pack(tree, lay)
     assert flat.shape == (lay.padded_size,) and flat.dtype == jnp.float32
     # pad region is exact zeros
-    assert float(jnp.abs(flat[lay.size:]).max()) == 0.0
+    assert float(jnp.abs(flat[lay.size :]).max()) == 0.0
     got = packing.unpack(flat, lay)
     assert jax.tree.structure(got) == jax.tree.structure(tree)
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
         assert a.dtype == b.dtype and a.shape == b.shape
-        np.testing.assert_allclose(np.asarray(a, np.float32),
-                                   np.asarray(b, np.float32), rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-6
+        )
 
 
 def test_unpack_without_cast_keeps_f32():
@@ -63,15 +64,20 @@ def test_unpack_without_cast_keeps_f32():
 
 def test_pack_batch_stacks_rows():
     rng = np.random.RandomState(1)
-    trees = [{"a": jnp.asarray(rng.randn(50).astype(np.float32)),
-              "b": jnp.asarray(rng.randn(6, 6).astype(np.float32))}
-             for _ in range(4)]
+    trees = [
+        {
+            "a": jnp.asarray(rng.randn(50).astype(np.float32)),
+            "b": jnp.asarray(rng.randn(6, 6).astype(np.float32)),
+        }
+        for _ in range(4)
+    ]
     lay = packing.make_layout(trees[0], block=64)
     X = packing.pack_batch(trees, lay)
     assert X.shape == (4, lay.padded_size)
     for i, t in enumerate(trees):
-        np.testing.assert_array_equal(np.asarray(X[i]),
-                                      np.asarray(packing.pack(t, lay)))
+        np.testing.assert_array_equal(
+            np.asarray(X[i]), np.asarray(packing.pack(t, lay))
+        )
 
 
 def test_scalar_and_empty_padding_edges():

@@ -15,7 +15,7 @@ BITS = [4, 8, 16]
 @st.composite
 def arrays(draw, max_len=2000):
     n = draw(st.integers(8, max_len))
-    seed = draw(st.integers(0, 2 ** 16))
+    seed = draw(st.integers(0, 2**16))
     scale = draw(st.floats(1e-3, 1e3))
     rng = np.random.RandomState(seed)
     return jnp.asarray(rng.randn(n).astype(np.float32) * scale)

@@ -62,25 +62,22 @@ def test_quantize_row_sr_storage_classes():
 
 
 def test_quantize_uplink_padding_stays_zero():
-    tree = {"w": jnp.asarray(np.random.RandomState(2).randn(100),
-                             jnp.float32)}
+    tree = {"w": jnp.asarray(np.random.RandomState(2).randn(100), jnp.float32)}
     lay = packing.make_layout(tree)
     flat = packing.pack(tree, lay)
     for bits in (4, 8, 16):
         r = ota.quantize_uplink(flat, bits, jnp.uint32(3), 1)
-        q = (unpack_int4_rows(r.data) if r.kind == "int4" else r.data)
-        assert int(jnp.abs(q[lay.size:].astype(jnp.int32)).max()) == 0
+        q = unpack_int4_rows(r.data) if r.kind == "int4" else r.data
+        assert int(jnp.abs(q[lay.size :].astype(jnp.int32)).max()) == 0
 
 
 def test_wire_bytes_4bit_cohort_under_one_seventh():
     """Acceptance: a 4-bit cohort's uplink <= 1/7 the f32 bytes."""
-    tree = {"w": jnp.asarray(np.random.RandomState(3).randn(5000),
-                             jnp.float32)}
+    tree = {"w": jnp.asarray(np.random.RandomState(3).randn(5000), jnp.float32)}
     lay = packing.make_layout(tree)
     flat = packing.pack(tree, lay)
     K = 4
-    rows = [ota.quantize_uplink(flat, 4, jnp.uint32(9), i)
-            for i in range(K)]
+    rows = [ota.quantize_uplink(flat, 4, jnp.uint32(9), i) for i in range(K)]
     wire = sum(r.wire_nbytes for r in rows)
     f32 = 4 * lay.padded_size * K
     assert wire <= f32 / 7, (wire, f32)
@@ -94,16 +91,24 @@ def test_wire_bytes_4bit_cohort_under_one_seventh():
 
 def _mixed_updates(n, seed=7):
     rng = np.random.RandomState(seed)
-    return [{"w": jnp.asarray(rng.randn(40, 13).astype(np.float32)),
-             "b": [jnp.asarray(rng.randn(77).astype(np.float32)),
-                   jnp.asarray(rng.randn(3, 5, 2).astype(np.float32))]}
-            for _ in range(n)]
+    return [
+        {
+            "w": jnp.asarray(rng.randn(40, 13).astype(np.float32)),
+            "b": [
+                jnp.asarray(rng.randn(77).astype(np.float32)),
+                jnp.asarray(rng.randn(3, 5, 2).astype(np.float32)),
+            ],
+        }
+        for _ in range(n)
+    ]
 
 
 def _rows_of(ups, bits, lay, key):
     sr = ota.derive_sr_seed(key)
-    return [ota.quantize_uplink(packing.pack(u, lay), b, sr, i)
-            for i, (u, b) in enumerate(zip(ups, bits))]
+    return [
+        ota.quantize_uplink(packing.pack(u, lay), b, sr, i)
+        for i, (u, b) in enumerate(zip(ups, bits))
+    ]
 
 
 def test_packed_rows_match_pertree_oracle():
@@ -117,18 +122,18 @@ def test_packed_rows_match_pertree_oracle():
         cfg = ota.OTAConfig(snr_db=snr)
         key = jax.random.key(123)
         rows = _rows_of(ups, bits, lay, key)
-        packed, info_p = ota.ota_aggregate_packed(key, rows, bits, weights,
-                                                  lay, cfg)
-        tree, info_t = ota.ota_aggregate_pertree(key, ups, bits, weights,
-                                                 cfg)
+        packed, info_p = ota.ota_aggregate_packed(key, rows, bits, weights, lay, cfg)
+        tree, info_t = ota.ota_aggregate_pertree(key, ups, bits, weights, cfg)
         flat, _ = ota.ota_aggregate(key, ups, bits, weights, cfg)
         assert jax.tree.structure(packed) == jax.tree.structure(tree)
         for a, b in zip(jax.tree.leaves(packed), jax.tree.leaves(tree)):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                       rtol=1e-4, atol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5
+            )
         for a, b in zip(jax.tree.leaves(packed), jax.tree.leaves(flat)):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                       rtol=1e-4, atol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5
+            )
         assert info_p["participation"] == info_t["participation"]
         assert abs(info_p["noise_std"] - info_t["noise_std"]) < 1e-6
 
@@ -156,10 +161,12 @@ def test_packed_kernel_bit_equal_to_oracle_mixed_4_8():
     key = jax.random.key(9)
     rows = _rows_of(ups, bits, lay, key)
     cfg = ota.OTAConfig(snr_db=30.0)
-    a_ker, _ = ota.ota_aggregate_packed(key, rows, bits, weights, lay, cfg,
-                                        use_kernel=True)
-    a_jnp, _ = ota.ota_aggregate_packed(key, rows, bits, weights, lay, cfg,
-                                        use_kernel=False)
+    a_ker, _ = ota.ota_aggregate_packed(
+        key, rows, bits, weights, lay, cfg, use_kernel=True
+    )
+    a_jnp, _ = ota.ota_aggregate_packed(
+        key, rows, bits, weights, lay, cfg, use_kernel=False
+    )
     for a, b in zip(jax.tree.leaves(a_ker), jax.tree.leaves(a_jnp)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
@@ -183,8 +190,11 @@ def test_dequant_superpose_kernel_matches_ref_direct():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     # and both dequantize to the unpacked truth
     np.testing.assert_allclose(
-        np.asarray(got), np.asarray(ref.ota_packed_ref(q4, scale, w)),
-        rtol=1e-6, atol=1e-6)
+        np.asarray(got),
+        np.asarray(ref.ota_packed_ref(q4, scale, w)),
+        rtol=1e-6,
+        atol=1e-6,
+    )
 
 
 def test_degenerate_and_midrange_bits_match_flat_path():
@@ -202,8 +212,7 @@ def test_degenerate_and_midrange_bits_match_flat_path():
     flat, _ = ota.ota_aggregate(key, ups, bits, weights)
     for a, b in zip(jax.tree.leaves(packed), jax.tree.leaves(flat)):
         assert np.isfinite(np.asarray(a)).all()
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
 
 
 def test_fl_round_uplink_is_packed():
@@ -212,9 +221,16 @@ def test_fl_round_uplink_is_packed():
     from repro.configs.base import FLConfig
     from repro.fl import FLServer
 
-    cfg = FLConfig(n_clients=3, clients_per_round=2, n_rounds=1,
-                   local_steps=1, local_batch=2, lr=1e-3,
-                   planner="unified", seed=3)
+    cfg = FLConfig(
+        n_clients=3,
+        clients_per_round=2,
+        n_rounds=1,
+        local_steps=1,
+        local_batch=2,
+        lr=1e-3,
+        planner="unified",
+        seed=3,
+    )
     srv = FLServer(cfg, shard_size=4)
     srv.run(1)
     f32 = 4 * srv.layout.padded_size * 2
